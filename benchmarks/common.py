@@ -1,0 +1,38 @@
+"""Shared benchmark helpers: workload sets, CSV emission, quick/full modes."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+QUICK = os.environ.get("BENCH_QUICK", "1") != "0"
+
+# quick mode: subset of apps + short traces (CI-friendly); full mode: the
+# paper's complete workload table (BENCH_QUICK=0)
+QUICK_APPS = ["cactusADM", "soplex", "streamcluster", "GUPS", "mcf", "mix2"]
+
+
+def workloads():
+    from repro.sim.runner import workloads as all_w
+
+    return QUICK_APPS if QUICK else all_w()
+
+
+def sim_kwargs():
+    # quick mode still needs enough intervals for history-based migration to
+    # converge (the paper's steady state); full mode uses the calibrated
+    # per-app access counts.
+    return {"intervals": 7, "accesses": 50_000} if QUICK else {
+        "intervals": 8, "accesses": None}
+
+
+def emit(name: str, rows: list[dict], t0: float, derived: str = "") -> None:
+    """Print rows as CSV plus the harness-standard summary line."""
+    if rows:
+        cols = list(rows[0].keys())
+        print(",".join(cols))
+        for r in rows:
+            print(",".join(str(r[c]) for c in cols))
+    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    print(f"{name},{us:.1f},{derived}")
+    sys.stdout.flush()

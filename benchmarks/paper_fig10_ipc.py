@@ -1,0 +1,35 @@
+"""Fig. 10: IPC normalized to Flat-static — the paper's headline comparison."""
+import time
+
+from benchmarks.common import emit
+from benchmarks.paper_policies import all_cells
+from repro.sim.config import POLICIES
+
+
+def run():
+    t0 = time.time()
+    cells = all_cells()
+    apps = sorted({a for a, _ in cells})
+    rows = []
+    ratios = {p: [] for p in POLICIES}
+    for app in apps:
+        base = cells[(app, "flat-static")].ipc
+        row = {"app": app}
+        for pol in POLICIES:
+            r = cells[(app, pol)].ipc / base
+            row[pol] = round(r, 3)
+            ratios[pol].append(r)
+        rows.append(row)
+    g = lambda p: sum(ratios[p]) / len(ratios[p])
+    derived = (
+        f"rainbow_vs_flat={g('rainbow'):.2f}x_paper=1.727x;"
+        f"rainbow_vs_hscc4k={g('rainbow')/g('hscc-4kb-mig'):.2f}x_paper=1.228x;"
+        f"rainbow_vs_hscc2m={g('rainbow')/g('hscc-2mb-mig'):.2f}x_paper=1.173x;"
+        f"dramonly_vs_rainbow={g('dram-only')/g('rainbow'):.2f}x_paper=1.14x"
+    )
+    emit("paper_fig10_ipc", rows, t0, derived)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Fig. 11: page-migration traffic normalized to total memory footprint."""
+import time
+
+from benchmarks.common import emit
+from benchmarks.paper_policies import all_cells
+
+
+def run():
+    t0 = time.time()
+    cells = all_cells()
+    apps = sorted({a for a, _ in cells})
+    rows = []
+    reds = []
+    for app in apps:
+        row = {"app": app}
+        for pol in ("hscc-4kb-mig", "hscc-2mb-mig", "rainbow"):
+            row[pol] = round(cells[(app, pol)].traffic_ratio, 4)
+        rows.append(row)
+        if row["hscc-2mb-mig"] > 0:
+            reds.append(1 - row["rainbow"] / row["hscc-2mb-mig"])
+    avg = 100 * sum(reds) / max(len(reds), 1)
+    emit("paper_fig11_traffic", rows, t0,
+         f"rainbow_traffic_reduction_vs_2mb={avg:.1f}%_paper=50%")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

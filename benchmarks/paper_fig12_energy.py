@@ -1,0 +1,31 @@
+"""Fig. 12: energy consumption normalized to Flat-static."""
+import time
+
+from benchmarks.common import emit
+from benchmarks.paper_policies import all_cells
+from repro.sim.config import POLICIES
+
+
+def run():
+    t0 = time.time()
+    cells = all_cells()
+    apps = sorted({a for a, _ in cells})
+    rows = []
+    ratios = {p: [] for p in POLICIES}
+    for app in apps:
+        base = cells[(app, "flat-static")].energy["total_j"]
+        row = {"app": app}
+        for pol in POLICIES:
+            r = cells[(app, pol)].energy["total_j"] / base
+            row[pol] = round(r, 3)
+            ratios[pol].append(r)
+        rows.append(row)
+    g = lambda p: sum(ratios[p]) / len(ratios[p])
+    emit("paper_fig12_energy", rows, t0,
+         f"rainbow_vs_flat={g('rainbow'):.2f}_paper=0.549;"
+         f"rainbow_vs_dramonly={g('rainbow')/g('dram-only'):.2f}_paper=0.315")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Fig. 15: breakdown of Rainbow's runtime overhead (remapping, bitmap cache,
+migration, shootdown, clflush)."""
+import time
+
+from benchmarks.common import emit
+from benchmarks.paper_policies import all_cells
+
+
+def run():
+    t0 = time.time()
+    cells = all_cells()
+    apps = sorted({a for a, _ in cells})
+    rows = []
+    for app in apps:
+        m = cells[(app, "rainbow")]
+        b = m.breakdown
+        over = (b["cycles_remap"] + b["cycles_bitmap"] + b["cycles_mig"]
+                + b["cycles_shootdown"] + b["cycles_clflush"])
+        rows.append({
+            "app": app,
+            "overhead_pct_of_cycles": round(100 * over / m.total_cycles, 2),
+            "remap_pct": round(100 * b["cycles_remap"] / max(over, 1), 1),
+            "bitmap_pct": round(100 * b["cycles_bitmap"] / max(over, 1), 1),
+            "migration_pct": round(100 * b["cycles_mig"] / max(over, 1), 1),
+            "shootdown_pct": round(100 * b["cycles_shootdown"] / max(over, 1), 1),
+            "clflush_pct": round(100 * b["cycles_clflush"] / max(over, 1), 1),
+        })
+    avg = sum(r["overhead_pct_of_cycles"] for r in rows) / max(len(rows), 1)
+    emit("paper_fig15_runtime", rows, t0,
+         f"avg_runtime_overhead={avg:.1f}%_paper=9.8%")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

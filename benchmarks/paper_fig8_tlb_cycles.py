@@ -1,0 +1,26 @@
+"""Fig. 8: percent of execution cycles spent servicing TLB misses."""
+import time
+
+from benchmarks.common import emit
+from benchmarks.paper_policies import all_cells
+from repro.sim.config import POLICIES
+
+
+def run():
+    t0 = time.time()
+    cells = all_cells()
+    apps = sorted({a for a, _ in cells})
+    rows = []
+    for app in apps:
+        row = {"app": app}
+        for pol in POLICIES:
+            m = cells[(app, pol)]
+            walk_frac = (m.breakdown["cycles_walk"] + m.breakdown["cycles_tlb"]) / m.total_cycles
+            row[pol] = round(100 * walk_frac, 3)
+        rows.append(row)
+    emit("paper_fig8_tlb_cycles", rows, t0, "pct_cycles_tlb_service")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Fig. 9: breakdown of Rainbow's address-translation overhead
+(split-TLB hits / bitmap cache / SPTWs / address remapping)."""
+import time
+
+from benchmarks.common import emit
+from benchmarks.paper_policies import all_cells
+
+
+def run():
+    t0 = time.time()
+    cells = all_cells()
+    apps = sorted({a for a, _ in cells})
+    rows = []
+    for app in apps:
+        m = cells[(app, "rainbow")]
+        b = m.breakdown
+        trans = b["cycles_tlb"] + b["cycles_walk"] + b["cycles_bitmap"] + b["cycles_remap"]
+        rows.append({
+            "app": app,
+            "translation_pct_of_cycles": round(100 * trans / m.total_cycles, 2),
+            "split_tlb_pct": round(100 * b["cycles_tlb"] / max(trans, 1), 1),
+            "bitmap_cache_pct": round(100 * b["cycles_bitmap"] / max(trans, 1), 1),
+            "sptw_pct": round(100 * b["cycles_walk"] / max(trans, 1), 1),
+            "remap_pct": round(100 * b["cycles_remap"] / max(trans, 1), 1),
+            "bmc_misses": int(b["bmc_misses"]),
+        })
+    avg = sum(r["translation_pct_of_cycles"] for r in rows) / max(len(rows), 1)
+    emit("paper_fig9_breakdown", rows, t0,
+         f"avg_translation_overhead={avg:.1f}%_paper=12%")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

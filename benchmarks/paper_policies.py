@@ -1,0 +1,23 @@
+"""Shared driver for Figs. 7-12 + 15: run every (workload x policy) cell once,
+cache the SimMetrics, and let each figure script slice its columns."""
+from __future__ import annotations
+
+import functools
+
+from benchmarks.common import sim_kwargs, workloads
+from repro.sim.config import POLICIES
+from repro.sim.runner import simulate
+
+
+@functools.lru_cache(maxsize=None)
+def _cell(app: str, policy: str, intervals: int, accesses) -> object:
+    return simulate(app, policy, intervals=intervals, accesses=accesses)
+
+
+def all_cells():
+    kw = sim_kwargs()
+    out = {}
+    for app in workloads():
+        for pol in POLICIES:
+            out[(app, pol)] = _cell(app, pol, kw["intervals"], kw["accesses"])
+    return out

@@ -1,0 +1,91 @@
+"""Render §Dry-run and §Roofline markdown tables into EXPERIMENTS.md from the
+dry-run artifacts (idempotent: replaces the <!-- *_TABLE --> markers)."""
+from __future__ import annotations
+
+import json
+
+from benchmarks.roofline import load_cells, rows_from_cells
+from repro.configs import ARCH_IDS, applicable_shapes
+from repro.models.config import SHAPES
+
+
+def fmt_bytes(b):
+    if not b:
+        return "-"
+    return f"{b / (1 << 30):.2f} GiB"
+
+
+def dryrun_table() -> str:
+    cells = {(c["arch"], c["shape"], c["mesh"]): c for c in load_cells()}
+    lines = [
+        "| arch | shape | 16x16 | 2x16x16 | bytes/dev (peak) | HLO GFLOP/dev | collective B/dev | top collectives |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_IDS:
+        shapes = applicable_shapes(arch)
+        for shape in ["train_4k", "prefill_32k", "decode_32k", "long_500k"]:
+            if shape not in shapes:
+                if shape == "long_500k":
+                    lines.append(
+                        f"| {arch} | {shape} | skip | skip | — | — | — | "
+                        f"full-attention arch (DESIGN.md §4) |"
+                    )
+                continue
+            c1 = cells.get((arch, shape, "16x16"))
+            c2 = cells.get((arch, shape, "2x16x16"))
+            ok1 = "PASS" if c1 and c1.get("ok") else "FAIL"
+            ok2 = "PASS" if c2 and c2.get("ok") else "FAIL"
+            mem = c1["memory"].get("peak_bytes_per_device", 0) if c1 else 0
+            fl = c1["cost_analysis"].get("flops", 0) / 1e9 if c1 else 0
+            coll = c1["collectives"]["total_bytes_per_device"] if c1 else 0
+            ops = (
+                ", ".join(
+                    f"{k}:{v / 1e9:.2f}GB"
+                    for k, v in sorted(
+                        c1["collectives"]["bytes_by_op"].items(),
+                        key=lambda kv: -kv[1],
+                    )[:2]
+                )
+                if c1
+                else ""
+            )
+            lines.append(
+                f"| {arch} | {shape} | {ok1} | {ok2} | {fmt_bytes(mem)} |"
+                f" {fl:,.0f} | {coll / 1e9:.2f} GB | {ops} |"
+            )
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    rows = [
+        r for r in rows_from_cells(load_cells())
+        if r["mesh"] == "16x16"
+    ]
+    lines = [
+        "| arch | shape | kind | compute_s | memory_s | collective_s | dominant | fraction | MODEL_FLOPS | useful ratio | what moves the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {a: i for i, a in enumerate(ARCH_IDS)}
+    rows.sort(key=lambda r: (order.get(r["arch"], 99), r["shape"]))
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | {r['compute_s']:.4f} |"
+            f" {r['memory_s']:.4f} | {r['collective_s']:.4f} | {r['dominant']} |"
+            f" {r['roofline_fraction']:.3f} | {r['model_flops']} |"
+            f" {r['useful_flops_ratio']:.3f} | {r['note']} |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    text = text.replace("<!-- DRYRUN_TABLE -->", dryrun_table(), 1)
+    text = text.replace("<!-- ROOFLINE_TABLE -->", roofline_table(), 1)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("tables rendered into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Benchmark driver: one module per paper table/figure + the roofline table.
+
+``PYTHONPATH=src python -m benchmarks.run``                 (quick mode)
+``BENCH_QUICK=0 PYTHONPATH=src python -m benchmarks.run``   (full workload table)
+
+Each module prints its rows as CSV plus a ``name,us_per_call,derived`` line,
+where `derived` carries the paper-claim comparison for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        paper_fig1_table12,
+        paper_fig7_mpki,
+        paper_fig8_tlb_cycles,
+        paper_fig9_breakdown,
+        paper_fig10_ipc,
+        paper_fig11_traffic,
+        paper_fig12_energy,
+        paper_fig13_14_sensitivity,
+        paper_fig15_runtime,
+        paper_table6_storage,
+        roofline,
+        serving_rainbow,
+    )
+
+    modules = [
+        paper_table6_storage,  # cheap first
+        paper_fig1_table12,
+        paper_fig7_mpki,
+        paper_fig8_tlb_cycles,
+        paper_fig9_breakdown,
+        paper_fig10_ipc,
+        paper_fig11_traffic,
+        paper_fig12_energy,
+        paper_fig15_runtime,
+        paper_fig13_14_sensitivity,
+        serving_rainbow,
+        roofline,
+    ]
+    failed = []
+    for mod in modules:
+        name = mod.__name__.split(".")[-1]
+        print(f"\n===== {name} =====")
+        try:
+            mod.run()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"\nFAILED benchmarks: {failed}")
+        sys.exit(1)
+    print("\nall benchmarks completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Layer-B technique benchmark: Rainbow paged decode vs flat decode on CPU
+(reduced config) — wall time + exactness + promotion stats. The roofline-level
+comparison for the full configs lives in the dry-run artifacts (--kv paged)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs import get_reduced_config
+from repro.memory.kvcache import PagedConfig, paged_init
+from repro.models import model as M
+from repro.serving.rainbow_decode import rainbow_decode_step
+
+
+def run():
+    t0 = time.time()
+    cfg = get_reduced_config("qwen3-4b")
+    key = jax.random.PRNGKey(0)
+    B, S = 4, 64
+    pcfg = PagedConfig(block_size=8, blocks_per_seq=S // 8, hot_slots=16,
+                       top_n=4, max_promotions=8, interval_steps=8)
+    params = M.init_params(cfg, key, tp=1)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+
+    flat_step = jax.jit(lambda p, t, c: M.decode_step(cfg, p, t, c))
+    rb_step = jax.jit(lambda p, t, k: rainbow_decode_step(cfg, pcfg, p, t, k))
+    cache = M.init_cache(cfg, B, S, tp=1)
+    kv = paged_init(cfg, pcfg, B, 1, cfg.num_layers)
+
+    # warmup + timed loops
+    fl, cache = flat_step(params, toks[:, :1], cache)
+    rl, kv = rb_step(params, toks[:, :1], kv)
+    jax.block_until_ready((fl, rl))
+
+    tf = time.time()
+    err = 0.0
+    for t in range(1, S):
+        fl, cache = flat_step(params, toks[:, t:t + 1], cache)
+    jax.block_until_ready(fl)
+    flat_s = time.time() - tf
+
+    tr = time.time()
+    for t in range(1, S):
+        rl, kv = rb_step(params, toks[:, t:t + 1], kv)
+    jax.block_until_ready(rl)
+    rb_s = time.time() - tr
+    err = float(jnp.abs(fl[..., :cfg.vocab_size] - rl[..., :cfg.vocab_size]).max())
+
+    rows = [{
+        "flat_ms_per_step": round(1000 * flat_s / (S - 1), 3),
+        "rainbow_ms_per_step": round(1000 * rb_s / (S - 1), 3),
+        "exactness_err": err,
+        "promoted_blocks": int((kv.remap.remap >= 0).sum()),
+        "steps": S - 1,
+    }]
+    emit("serving_rainbow", rows, t0, f"exact={err == 0.0}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Reproduce the paper's headline comparison on one workload (Layer A).
+
+Runs all five policies of §IV-A on the soplex trace and prints the Fig. 7/10/11
+metrics side by side.
+
+Run: PYTHONPATH=src python examples/memsim_repro.py [app]
+"""
+import sys
+
+from repro.sim.config import POLICIES
+from repro.sim.runner import simulate
+
+app = sys.argv[1] if len(sys.argv) > 1 else "soplex"
+print(f"workload: {app} (synthetic trace calibrated to paper Tables I/II)\n")
+print(f"{'policy':16s} {'IPC':>7s} {'vs flat':>8s} {'MPKI':>9s} "
+      f"{'TLB%':>6s} {'mig':>6s} {'traffic':>8s} {'energy(J)':>10s}")
+base = None
+for pol in POLICIES:
+    m = simulate(app, pol, intervals=5, accesses=40_000)
+    if base is None:
+        base = m.ipc
+    print(f"{pol:16s} {m.ipc:7.3f} {m.ipc / base:7.2f}x {m.mpki:9.3f} "
+          f"{100 * m.tlb_service_frac:6.2f} {m.migrations:6d} "
+          f"{m.traffic_ratio:8.3f} {m.energy['total_j']:10.3f}")
+print("\npaper claims (averages over its full workload set): Rainbow vs "
+      "Flat-static +72.7% IPC, vs HSCC-4KB +22.8%, vs HSCC-2MB +17.3%; "
+      "TLB misses -99.8% vs 4KB paging.")

@@ -1,0 +1,1 @@
+from repro.checkpoint.store import CheckpointManager, latest_step, restore_state, save_state

@@ -1,0 +1,42 @@
+"""deepseek-moe-16b [moe] — 2 shared + 64 routed top-6, fine-grained, first layer
+dense FFN [arXiv:2401.06066; hf]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=11264,  # dense first layer: (top_k + shared) * moe_d_ff
+    vocab_size=102400,
+    head_dim=128,
+    moe_num_experts=64,
+    moe_top_k=6,
+    moe_num_shared=2,
+    moe_d_ff=1408,
+    moe_first_dense=1,
+    rope_theta=1e4,
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-moe-16b-reduced",
+        family="moe",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=192,
+        vocab_size=256,
+        head_dim=16,
+        moe_num_experts=8,
+        moe_top_k=2,
+        moe_num_shared=1,
+        moe_d_ff=48,
+        moe_first_dense=1,
+        vocab_pad_multiple=8,
+        rope_theta=1e4,
+    )

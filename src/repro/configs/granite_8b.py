@@ -1,0 +1,31 @@
+"""granite-8b [dense] — llama-arch, code [arXiv:2405.04324; hf]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-8b",
+    family="dense",
+    num_layers=36,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=49152,
+    head_dim=128,
+    rope_theta=1e4,
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="granite-8b-reduced",
+        family="dense",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=160,
+        vocab_size=256,
+        head_dim=16,
+        vocab_pad_multiple=8,
+        rope_theta=1e4,
+    )

@@ -1,0 +1,42 @@
+"""hymba-1.5b [hybrid] — parallel attn+mamba heads per layer; sliding-window
+attention with periodic global layers [arXiv:2411.13676; hf]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    d_ff=5504,
+    vocab_size=32001,
+    head_dim=64,  # 1600 / 25
+    ssm_state=16,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    sliding_window=2048,
+    global_attn_every=16,  # layers 0 and 16 use full attention
+    rope_theta=1e4,
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="hymba-1.5b-reduced",
+        family="hybrid",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=128,
+        vocab_size=256,
+        head_dim=16,
+        ssm_state=8,
+        ssm_head_dim=16,
+        ssm_expand=2,
+        ssm_chunk=16,
+        sliding_window=32,
+        global_attn_every=2,
+        vocab_pad_multiple=8,
+    )

@@ -1,0 +1,33 @@
+"""internvl2-2b [vlm] — InternViT frontend STUB (input_specs() provides patch
+embeddings) + InternLM2 backbone [arXiv:2404.16821; hf]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=92553,
+    head_dim=128,
+    num_vision_tokens=256,
+    rope_theta=1e6,
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-2b-reduced",
+        family="vlm",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=160,
+        vocab_size=256,
+        head_dim=16,
+        num_vision_tokens=8,
+        vocab_pad_multiple=8,
+    )

@@ -1,0 +1,38 @@
+"""qwen2-moe-a2.7b [moe] — 4 shared + 60 routed top-4 [hf:Qwen/Qwen1.5-MoE-A2.7B; hf]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=0,  # all layers MoE
+    vocab_size=151936,
+    head_dim=128,
+    moe_num_experts=60,
+    moe_top_k=4,
+    moe_num_shared=4,
+    moe_d_ff=1408,
+    rope_theta=1e6,
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-moe-a2.7b-reduced",
+        family="moe",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=0,
+        vocab_size=256,
+        head_dim=16,
+        moe_num_experts=6,
+        moe_top_k=2,
+        moe_num_shared=1,
+        moe_d_ff=48,
+        vocab_pad_multiple=8,
+    )

@@ -1,0 +1,31 @@
+"""smollm-360m [dense] — llama-arch small [hf:HuggingFaceTB/SmolLM-135M; hf]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-360m",
+    family="dense",
+    num_layers=32,
+    d_model=960,
+    num_heads=15,
+    num_kv_heads=5,
+    d_ff=2560,
+    vocab_size=49152,
+    head_dim=64,  # 960 / 15
+    rope_theta=1e4,
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="smollm-360m-reduced",
+        family="dense",
+        num_layers=2,
+        d_model=60,
+        num_heads=3,
+        num_kv_heads=1,
+        d_ff=112,
+        vocab_size=256,
+        head_dim=20,
+        vocab_pad_multiple=8,
+        rope_theta=1e4,
+    )

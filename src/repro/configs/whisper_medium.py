@@ -1,0 +1,43 @@
+"""whisper-medium [audio] — enc-dec, conv frontend STUB: input_specs() provides
+precomputed frame embeddings [arXiv:2212.04356; unverified]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="audio",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51865,
+    head_dim=64,
+    is_encoder_decoder=True,
+    num_encoder_layers=24,
+    encoder_seq_divisor=2,  # enc frames = seq_len // 2, dec tokens = seq_len // 2
+    norm="layernorm",
+    act="gelu",
+    gated_mlp=False,
+    rope_theta=1e4,  # decoder self-attn uses rope in our port (orig: learned pos)
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-medium-reduced",
+        family="audio",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=128,
+        vocab_size=256,
+        head_dim=16,
+        is_encoder_decoder=True,
+        num_encoder_layers=2,
+        encoder_seq_divisor=2,
+        norm="layernorm",
+        act="gelu",
+        gated_mlp=False,
+        vocab_pad_multiple=8,
+    )

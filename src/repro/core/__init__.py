@@ -1,0 +1,39 @@
+"""Rainbow core: the paper's contribution as a composable JAX module.
+
+Two-stage access counting (§III-B), utility-based migration with free/clean/dirty
+slot management (§III-C), migration bitmap + bitmap cache (§III-D), split TLBs and
+NVM->DRAM address remapping (§III-E), composed by RainbowController (§III-A).
+"""
+from repro.core import bitmap, counting, migration, rainbow, remap, tlb
+from repro.core.counting import (
+    Stage1State,
+    Stage2State,
+    select_top_n,
+    stage1_init,
+    stage1_record,
+    stage2_begin,
+    stage2_init,
+    stage2_record,
+    two_stage_interval,
+)
+from repro.core.migration import (
+    DramState,
+    MigrationPlan,
+    TimingParams,
+    adapt_threshold,
+    dram_init,
+    make_timing,
+    migration_benefit,
+    plan_migrations,
+    swap_benefit,
+)
+from repro.core.rainbow import (
+    RainbowConfig,
+    RainbowState,
+    end_interval,
+    observe,
+    rainbow_init,
+    translate_accesses,
+)
+from repro.core.remap import RemapState, remap_evict, remap_init, remap_install, translate
+from repro.core.tlb import SplitTLB, TLBState, split_tlb_init, split_tlb_lookup, tlb_init, tlb_lookup

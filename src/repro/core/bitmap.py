@@ -1,0 +1,113 @@
+"""Migration bitmap + set-associative bitmap cache (Rainbow §III-D).
+
+The bitmap marks, per 4 KB small page (or per KV block in Layer B), whether the page
+has been migrated to the performance tier. Packed 32 pages / uint32 word.
+
+The BitmapCache models the paper's 4000-entry, 8-way SRAM cache in the memory
+controller (272 KB total: 4 B PSN tag + 512-bit bitmap per entry, 9-cycle latency).
+Layer A uses it to charge translation-path cycles; Layer B does not need it (see
+DESIGN.md §2, hardware-adaptation note 2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import pytree_dataclass
+
+
+def bitmap_init(num_superpages: int, pages_per_sp: int) -> jax.Array:
+    words = (pages_per_sp + 31) // 32
+    return jnp.zeros((num_superpages, words), jnp.uint32)
+
+
+def bitmap_get(bitmap: jax.Array, sp: jax.Array, page: jax.Array) -> jax.Array:
+    """Vectorized test of migration flags. sp/page may be any matching shape."""
+    word = bitmap[sp, page >> 5]
+    return ((word >> (page & 31).astype(jnp.uint32)) & 1).astype(jnp.bool_)
+
+
+def _segment_or(idx: jax.Array, mask: jax.Array, size: int) -> jax.Array:
+    """OR together uint32 masks sharing the same index -> dense [size] array.
+
+    Sorts by index, ORs within runs via associative scan, and scatters the last
+    (fully-accumulated) element of each run with .max (safe: one nonzero per index).
+    """
+    order = jnp.argsort(idx)
+    sidx = idx[order]
+    smask = mask[order]
+
+    def combine(a, b):
+        ia, ma = a
+        ib, mb = b
+        return ib, jnp.where(ia == ib, ma | mb, mb)
+
+    _, acc = jax.lax.associative_scan(combine, (sidx, smask))
+    is_last = jnp.concatenate([sidx[1:] != sidx[:-1], jnp.ones((1,), jnp.bool_)])
+    contrib = jnp.where(is_last, acc, jnp.uint32(0))
+    return jnp.zeros((size,), jnp.uint32).at[sidx].max(contrib, mode="drop")
+
+
+def bitmap_update(
+    bitmap: jax.Array, sp: jax.Array, page: jax.Array, value: bool
+) -> jax.Array:
+    """Set (value=True) or clear (value=False) the given (sp, page) positions.
+
+    Duplicates are safe; entries with sp < 0 are dropped.
+    """
+    valid = sp >= 0
+    words = bitmap.shape[1]
+    sp_ = jnp.where(valid, sp, 0)
+    mask = (jnp.uint32(1) << (page & 31).astype(jnp.uint32)).astype(jnp.uint32)
+    mask = jnp.where(valid, mask, jnp.uint32(0))
+    fidx = (sp_ * words + (page >> 5)).astype(jnp.int32)
+    flat = bitmap.reshape(-1)
+    ored = _segment_or(fidx, mask, flat.shape[0])
+    out = (flat | ored) if value else (flat & ~ored)
+    return out.reshape(bitmap.shape)
+
+
+def bitmap_popcount(bitmap: jax.Array) -> jax.Array:
+    """Number of migrated pages per superpage."""
+    return jax.lax.population_count(bitmap).sum(axis=-1).astype(jnp.int32)
+
+
+@pytree_dataclass
+class BitmapCache:
+    """8-way set-associative cache of per-superpage bitmaps (Layer A cost model).
+
+    tags: int32[sets, ways] physical superpage number (-1 invalid)
+    lru:  int32[sets, ways] last-touch timestamp
+    """
+
+    tags: jax.Array
+    lru: jax.Array
+
+
+def bitmap_cache_init(entries: int = 4000, ways: int = 8) -> BitmapCache:
+    sets = max(1, entries // ways)
+    return BitmapCache(
+        tags=jnp.full((sets, ways), -1, jnp.int32),
+        lru=jnp.zeros((sets, ways), jnp.int32),
+    )
+
+
+def bitmap_cache_lookup(
+    cache: BitmapCache, psn: jax.Array, now: jax.Array
+) -> tuple[BitmapCache, jax.Array]:
+    """Single-access lookup+fill with LRU replacement. Returns (cache', hit)."""
+    sets = cache.tags.shape[0]
+    s = (psn % sets).astype(jnp.int32)
+    line = cache.tags[s]
+    hit_way = line == psn
+    hit = hit_way.any()
+    victim = jnp.argmin(cache.lru[s])
+    way = jnp.where(hit, jnp.argmax(hit_way), victim).astype(jnp.int32)
+    tags = cache.tags.at[s, way].set(psn.astype(jnp.int32))
+    lru = cache.lru.at[s, way].set(now.astype(jnp.int32))
+    return BitmapCache(tags=tags, lru=lru), hit
+
+
+def storage_overhead_bytes(entries: int = 4000, pages_per_sp: int = 512) -> int:
+    """Paper: 4 B PSN + 512-bit bitmap per entry -> 272 KB for 4000 entries."""
+    return entries * (4 + pages_per_sp // 8)

@@ -1,0 +1,189 @@
+"""Two-stage memory access counting (Rainbow §III-B), vectorized in JAX.
+
+Stage 1: per-superpage saturating counters (2 bytes each in hardware; we model the
+15-bit value + 1-bit overflow layout of Fig. 4 exactly, stored as uint16).
+
+Stage 2: for the top-N hot superpages selected at the end of an interval, per-4KB-page
+(or per-KV-block) counters inside each monitored superpage — a (N, pages_per_sp) table
+plus the 4-byte PSN tag per row (Fig. 4).
+
+Both stages are pure scatter-adds, so the same code drives:
+  * Layer A (the zsim/NVMain-style simulator) with physical-address traces, and
+  * Layer B (the serving runtime) with KV-block access streams emitted by attention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import pytree_dataclass, static_field
+
+COUNTER_MAX = (1 << 15) - 1  # 15-bit value field
+OVERFLOW_BIT = jnp.uint16(1 << 15)  # 1-bit overflow flag (=> "definitely hot")
+
+
+@pytree_dataclass
+class Stage1State:
+    """Per-superpage access counters for one interval."""
+
+    counts: jax.Array  # uint16[num_superpages] — 15-bit value + overflow bit
+
+
+@pytree_dataclass
+class Stage2State:
+    """Fine-grained counters for the top-N monitored superpages."""
+
+    psn: jax.Array  # int32[N] physical superpage number per row (-1 = unused)
+    counts: jax.Array  # uint16[N, pages_per_sp]
+
+
+def stage1_init(num_superpages: int) -> Stage1State:
+    return Stage1State(counts=jnp.zeros((num_superpages,), jnp.uint16))
+
+
+def stage2_init(top_n: int, pages_per_sp: int) -> Stage2State:
+    return Stage2State(
+        psn=jnp.full((top_n,), -1, jnp.int32),
+        counts=jnp.zeros((top_n, pages_per_sp), jnp.uint16),
+    )
+
+
+def _saturating_add_u16(counts: jax.Array, idx: jax.Array, inc: jax.Array) -> jax.Array:
+    """Scatter-add with 15-bit saturation + sticky overflow bit (Fig. 4 layout)."""
+    val = (counts & jnp.uint16(COUNTER_MAX)).astype(jnp.uint32)
+    ovf = counts & OVERFLOW_BIT
+    add = jnp.zeros_like(val).at[idx].add(inc.astype(jnp.uint32), mode="drop")
+    new = val + add
+    new_ovf = ovf | jnp.where(new > COUNTER_MAX, OVERFLOW_BIT, jnp.uint16(0))
+    new_val = jnp.minimum(new, COUNTER_MAX).astype(jnp.uint16)
+    return new_val | new_ovf
+
+
+def counter_value(counts: jax.Array) -> jax.Array:
+    """Effective hotness: overflowed counters are 'definitely hot' (paper §III-B)."""
+    val = (counts & jnp.uint16(COUNTER_MAX)).astype(jnp.int32)
+    ovf = (counts & OVERFLOW_BIT) != 0
+    return jnp.where(ovf, jnp.int32(COUNTER_MAX + 1), val)
+
+
+def stage1_record(
+    state: Stage1State,
+    superpage_ids: jax.Array,  # int32[B] superpage index per access (<0 = ignore)
+    is_write: jax.Array,  # bool[B]
+    write_weight: int = 2,
+) -> Stage1State:
+    """Count one batch of NVM accesses at superpage granularity.
+
+    NVM writes carry a higher weight than reads (paper: "NVM write operations have a
+    higher weighting of the counter value").
+    """
+    valid = superpage_ids >= 0
+    inc = jnp.where(is_write, write_weight, 1).astype(jnp.uint32)
+    inc = jnp.where(valid, inc, 0)
+    idx = jnp.where(valid, superpage_ids, 0)
+    # mode="drop" + zeroed increments keeps invalid lanes inert.
+    return Stage1State(counts=_saturating_add_u16(state.counts, idx, inc))
+
+
+def select_top_n(state: Stage1State, top_n: int) -> tuple[jax.Array, jax.Array]:
+    """End-of-interval: pick the top-N hot superpages (paper step (2)).
+
+    Returns (psn[int32[N]], counts[int32[N]]); rows with zero accesses get psn=-1.
+    """
+    hotness = counter_value(state.counts)
+    k = min(top_n, hotness.shape[0])
+    vals, idx = jax.lax.top_k(hotness, k)
+    psn = jnp.where(vals > 0, idx.astype(jnp.int32), -1)
+    if k < top_n:  # fewer superpages than monitor rows: pad with empty rows
+        pad = top_n - k
+        psn = jnp.concatenate([psn, jnp.full((pad,), -1, jnp.int32)])
+        vals = jnp.concatenate([vals, jnp.zeros((pad,), vals.dtype)])
+    return psn, vals
+
+
+def stage2_begin(psn: jax.Array, pages_per_sp: int) -> Stage2State:
+    """Start fine-grained monitoring of the selected superpages."""
+    return Stage2State(
+        psn=psn.astype(jnp.int32),
+        counts=jnp.zeros((psn.shape[0], pages_per_sp), jnp.uint16),
+    )
+
+
+def _psn_to_slot(psn_table: jax.Array, superpage_ids: jax.Array) -> jax.Array:
+    """Map each access's superpage id to its monitor row (-1 if unmonitored).
+
+    O(B·N) compare — N is small (paper: N=100), so this is a cheap, fully
+    vectorizable analogue of the hardware CAM lookup.
+    """
+    eq = superpage_ids[:, None] == psn_table[None, :]  # [B, N]
+    eq &= psn_table[None, :] >= 0
+    any_hit = eq.any(axis=1)
+    slot = jnp.argmax(eq, axis=1).astype(jnp.int32)
+    return jnp.where(any_hit, slot, -1)
+
+
+def stage2_record(
+    state: Stage2State,
+    superpage_ids: jax.Array,  # int32[B]
+    page_offsets: jax.Array,  # int32[B] small-page index within superpage
+    is_write: jax.Array,  # bool[B]
+    write_weight: int = 2,
+) -> Stage2State:
+    """Count accesses that fall inside monitored superpages at small-page grain."""
+    slot = _psn_to_slot(state.psn, superpage_ids)
+    valid = slot >= 0
+    n, p = state.counts.shape
+    flat_idx = jnp.where(valid, slot * p + page_offsets, 0)
+    inc = jnp.where(is_write, write_weight, 1).astype(jnp.uint32)
+    inc = jnp.where(valid, inc, 0)
+    flat = _saturating_add_u16(state.counts.reshape(-1), flat_idx, inc)
+    return Stage2State(psn=state.psn, counts=flat.reshape(n, p))
+
+
+def stage2_split_rw(
+    state_reads: Stage2State, state_writes: Stage2State
+) -> tuple[jax.Array, jax.Array]:
+    """Convenience: effective read/write counts for the utility model (Eq. 1)."""
+    return counter_value(state_reads.counts), counter_value(state_writes.counts)
+
+
+@functools.partial(jax.jit, static_argnames=("top_n", "pages_per_sp", "write_weight"))
+def two_stage_interval(
+    superpage_ids: jax.Array,
+    page_offsets: jax.Array,
+    is_write: jax.Array,
+    num_superpages: int | None = None,
+    *,
+    top_n: int,
+    pages_per_sp: int,
+    write_weight: int = 2,
+):
+    """One full monitoring interval over a trace batch: stage 1 -> top-N -> stage 2.
+
+    The paper runs stage 1 on interval k and stage 2 on interval k+1 (history-based).
+    This helper applies both to the same batch, which is the variant used by the
+    serving runtime where access streams are stationary within an interval; the
+    simulator (Layer A) drives the two stages across intervals explicitly.
+    """
+    if num_superpages is None:
+        raise ValueError("num_superpages is required")
+    s1 = stage1_record(
+        stage1_init(num_superpages), superpage_ids, is_write, write_weight
+    )
+    psn, sp_counts = select_top_n(s1, top_n)
+    s2 = stage2_begin(psn, pages_per_sp)
+    s2 = stage2_record(s2, superpage_ids, page_offsets, is_write, write_weight)
+    return s1, psn, sp_counts, s2
+
+
+def storage_overhead_bytes(
+    num_superpages: int, top_n: int, pages_per_sp: int
+) -> dict[str, int]:
+    """Table VI storage model: SRAM bytes for counters + monitor table."""
+    return {
+        "stage1_counters": num_superpages * 2,
+        "stage2_psn_tags": top_n * 4,
+        "stage2_counters": top_n * pages_per_sp * 2,
+    }

@@ -1,0 +1,198 @@
+"""RainbowController: the paper's memory-controller + OS modules as one JAX pytree.
+
+Composes the pieces of §III into a single functional controller:
+
+  observe(accesses)  -> stage-1 superpage counting, stage-2 small-page counting for
+                        the currently-monitored hot superpages, DRAM-tier counter
+                        updates (for Eq. 2 victims).
+  end_interval()     -> top-N hot-superpage selection (next interval's monitor set),
+                        hot-page classification, utility-admission (Eq. 1/2) against
+                        the free/clean/dirty slot manager, remap/bitmap install and
+                        evict, adaptive threshold update.
+
+Both the Layer-A simulator and the Layer-B serving runtime drive this controller;
+only the meaning of "access" differs (post-LLC memory reference vs KV-block read).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import counting, migration, remap as remap_mod
+from repro.core.counting import Stage1State, Stage2State
+from repro.core.migration import DramState, MigrationPlan, TimingParams
+from repro.core.remap import RemapState
+from repro.utils import pytree_dataclass, static_field
+
+
+@pytree_dataclass
+class RainbowConfig:
+    num_superpages: int = static_field(default=1024)
+    pages_per_sp: int = static_field(default=512)
+    top_n: int = static_field(default=100)  # paper §IV-F: N = 100
+    dram_slots: int = static_field(default=4096)
+    write_weight: int = static_field(default=2)
+    max_migrations_per_interval: int = static_field(default=512)
+
+
+@pytree_dataclass
+class RainbowState:
+    s1: Stage1State
+    s2_reads: Stage2State
+    s2_writes: Stage2State
+    dram: DramState
+    remap: RemapState
+    threshold: jax.Array  # float32 adaptive admission threshold
+    interval: jax.Array  # int32 interval counter
+    evictions_last: jax.Array  # int32 bidirectional-traffic monitor
+    migrations_total: jax.Array  # int64 cumulative pages migrated in
+    evictions_total: jax.Array  # int64 cumulative pages evicted
+
+
+class IntervalReport(NamedTuple):
+    plan: MigrationPlan
+    cand_sp: jax.Array
+    cand_page: jax.Array
+    n_migrated: jax.Array
+    n_evicted: jax.Array
+    n_dirty_evicted: jax.Array
+    threshold: jax.Array
+
+
+def rainbow_init(cfg: RainbowConfig, threshold: float = 0.0) -> RainbowState:
+    return RainbowState(
+        s1=counting.stage1_init(cfg.num_superpages),
+        s2_reads=counting.stage2_init(cfg.top_n, cfg.pages_per_sp),
+        s2_writes=counting.stage2_init(cfg.top_n, cfg.pages_per_sp),
+        dram=migration.dram_init(cfg.dram_slots),
+        remap=remap_mod.remap_init(cfg.num_superpages, cfg.pages_per_sp),
+        threshold=jnp.asarray(threshold, jnp.float32),
+        interval=jnp.zeros((), jnp.int32),
+        evictions_last=jnp.zeros((), jnp.int32),
+        migrations_total=jnp.zeros((), jnp.int32),
+        evictions_total=jnp.zeros((), jnp.int32),
+    )
+
+
+def observe(
+    cfg: RainbowConfig,
+    st: RainbowState,
+    sp: jax.Array,  # int32[B] superpage id per access
+    page: jax.Array,  # int32[B] small page within superpage
+    is_write: jax.Array,  # bool[B]
+    now: jax.Array,  # int32 logical time (for LRU)
+) -> RainbowState:
+    """Record one batch of accesses. Accesses to migrated pages are DRAM-tier hits
+    (counted on the slot for Eq. 2); the rest are NVM-tier (stage-1/2 counting)."""
+    in_dram, slot = remap_mod.translate(st.remap, sp, page)
+    nvm_sp = jnp.where(in_dram, -1, sp)
+
+    s1 = counting.stage1_record(st.s1, nvm_sp, is_write, cfg.write_weight)
+    s2r = counting.stage2_record(
+        st.s2_reads, jnp.where(is_write, -1, nvm_sp), page, is_write * 0 > 0, 1
+    )
+    s2w = counting.stage2_record(
+        st.s2_writes, jnp.where(is_write, nvm_sp, -1), page, is_write, 1
+    )
+    dram = migration.dram_record_access(
+        st.dram, jnp.where(in_dram, slot, -1), is_write, now
+    )
+    return RainbowState(
+        s1=s1,
+        s2_reads=s2r,
+        s2_writes=s2w,
+        dram=dram,
+        remap=st.remap,
+        threshold=st.threshold,
+        interval=st.interval,
+        evictions_last=st.evictions_last,
+        migrations_total=st.migrations_total,
+        evictions_total=st.evictions_total,
+    )
+
+
+def end_interval(
+    cfg: RainbowConfig, st: RainbowState, timing: TimingParams
+) -> tuple[RainbowState, IntervalReport]:
+    """Close the interval: classify hot pages, admit migrations, rotate monitors."""
+    # ---- Hot-page candidates from stage-2 counters (monitored superpages). ----
+    reads = counting.counter_value(st.s2_reads.counts).astype(jnp.float32)
+    writes = counting.counter_value(st.s2_writes.counts).astype(jnp.float32)
+    n, p = reads.shape
+    psn = st.s2_reads.psn  # monitor rows (-1 unused)
+
+    flat_sp = jnp.repeat(psn, p)
+    flat_page = jnp.tile(jnp.arange(p, dtype=jnp.int32), n)
+    flat_r = reads.reshape(-1)
+    flat_w = writes.reshape(-1)
+
+    # Keep the K best candidates to bound the plan size (K = max migrations).
+    k = cfg.max_migrations_per_interval
+    score = migration.migration_benefit(flat_r, flat_w, timing)
+    score = jnp.where(flat_sp >= 0, score, -jnp.inf)
+    # Exclude pages already resident in DRAM.
+    already, _ = remap_mod.translate(
+        st.remap, jnp.maximum(flat_sp, 0), flat_page
+    )
+    score = jnp.where(already & (flat_sp >= 0), -jnp.inf, score)
+    _, top_idx = jax.lax.top_k(score, min(k, score.shape[0]))
+    cand_sp = jnp.where(score[top_idx] > -jnp.inf, flat_sp[top_idx], -1)
+    cand_page = flat_page[top_idx]
+    cand_r = flat_r[top_idx]
+    cand_w = flat_w[top_idx]
+
+    # ---- Utility admission against the slot manager (Eq. 1/2). ----
+    plan = migration.plan_migrations(
+        cand_sp, cand_page, cand_r, cand_w, st.dram, timing, st.threshold
+    )
+    dram = migration.dram_apply_plan(st.dram, plan, cand_sp, cand_page, st.interval)
+
+    # ---- Remap/bitmap maintenance: evict first, then install. ----
+    rm = remap_mod.remap_evict(st.remap, plan.evict_sp, plan.evict_page)
+    rm = remap_mod.remap_install(
+        rm,
+        jnp.where(plan.migrate, cand_sp, -1),
+        cand_page,
+        plan.dst_slot,
+    )
+
+    n_migrated = plan.migrate.sum().astype(jnp.int32)
+    n_evicted = (plan.evict_sp >= 0).sum().astype(jnp.int32)
+    n_dirty = plan.evict_dirty.sum().astype(jnp.int32)
+
+    # ---- Adaptive threshold from bidirectional traffic (§III-C). ----
+    threshold = migration.adapt_threshold(st.threshold, n_evicted)
+
+    # ---- Rotate monitors: next interval watches this interval's top-N. ----
+    new_psn, _ = counting.select_top_n(st.s1, cfg.top_n)
+    new_st = RainbowState(
+        s1=counting.stage1_init(cfg.num_superpages),
+        s2_reads=counting.stage2_begin(new_psn, cfg.pages_per_sp),
+        s2_writes=counting.stage2_begin(new_psn, cfg.pages_per_sp),
+        dram=migration.dram_new_interval(dram),
+        remap=rm,
+        threshold=threshold,
+        interval=st.interval + 1,
+        evictions_last=n_evicted,
+        migrations_total=st.migrations_total + n_migrated.astype(jnp.int32),
+        evictions_total=st.evictions_total + n_evicted.astype(jnp.int32),
+    )
+    report = IntervalReport(
+        plan=plan,
+        cand_sp=cand_sp,
+        cand_page=cand_page,
+        n_migrated=n_migrated,
+        n_evicted=n_evicted,
+        n_dirty_evicted=n_dirty,
+        threshold=threshold,
+    )
+    return new_st, report
+
+
+def translate_accesses(
+    st: RainbowState, sp: jax.Array, page: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Public vectorized translation (Fig. 6 outcome): (in_fast_tier, slot)."""
+    return remap_mod.translate(st.remap, sp, page)

@@ -1,0 +1,78 @@
+"""NVM->DRAM address remapping (Rainbow §III-E), as two-level block tables.
+
+Paper mechanism: when a 4 KB page migrates, its DRAM destination address is written
+into the first 8 bytes of its original NVM slot; a lookup that hits the superpage TLB
+but misses the 4 KB TLB reads that pointer (one NVM read) instead of walking page
+tables. The superpage is never splintered.
+
+TPU-native realization (DESIGN.md adaptation note 1): the pointer lives in a side
+table ``remap[superpage, page] -> performance-tier slot`` (-1 = not migrated). The
+residency bitmap answers "is it migrated?" and the remap table answers "where?"; both
+are tiny and stage into VMEM/SMEM inside kernels. Translation never touches payload.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitmap import bitmap_get, bitmap_init, bitmap_update
+from repro.utils import pytree_dataclass
+
+
+@pytree_dataclass
+class RemapState:
+    """bitmap: uint32[num_sp, words]; remap: int32[num_sp, pages_per_sp]."""
+
+    bitmap: jax.Array
+    remap: jax.Array
+
+
+def remap_init(num_superpages: int, pages_per_sp: int) -> RemapState:
+    return RemapState(
+        bitmap=bitmap_init(num_superpages, pages_per_sp),
+        remap=jnp.full((num_superpages, pages_per_sp), -1, jnp.int32),
+    )
+
+
+def remap_install(
+    st: RemapState, sp: jax.Array, page: jax.Array, slot: jax.Array
+) -> RemapState:
+    """Install migrated pages (vectorized; sp < 0 lanes dropped)."""
+    valid = sp >= 0
+    num_sp = st.remap.shape[0]
+    sp_ = jnp.where(valid, sp, num_sp)  # OOB -> dropped (no index-0 races)
+    remap = st.remap.at[sp_, page].set(slot.astype(jnp.int32), mode="drop")
+    bitmap = bitmap_update(st.bitmap, sp, page, True)
+    return RemapState(bitmap=bitmap, remap=remap)
+
+
+def remap_evict(st: RemapState, sp: jax.Array, page: jax.Array) -> RemapState:
+    """Remove mappings for evicted pages (vectorized; sp < 0 lanes dropped)."""
+    valid = sp >= 0
+    num_sp = st.remap.shape[0]
+    sp_ = jnp.where(valid, sp, num_sp)
+    remap = st.remap.at[sp_, page].set(jnp.int32(-1), mode="drop")
+    bitmap = bitmap_update(st.bitmap, sp, page, False)
+    return RemapState(bitmap=bitmap, remap=remap)
+
+
+def translate(
+    st: RemapState, sp: jax.Array, page: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Vectorized translation: returns (in_fast_tier[bool], slot[int32]).
+
+    slot is the performance-tier slot when migrated, else -1 (data is at its
+    home superpage location in the capacity tier).
+    """
+    migrated = bitmap_get(st.bitmap, sp, page)
+    slot = jnp.where(migrated, st.remap[sp, page], -1)
+    return migrated, slot
+
+
+def check_consistency(st: RemapState) -> jax.Array:
+    """Invariant: bitmap bit set <=> remap slot >= 0 (property-tested)."""
+    num_sp, pages = st.remap.shape
+    sp = jnp.arange(num_sp)[:, None].repeat(pages, 1)
+    pg = jnp.arange(pages)[None, :].repeat(num_sp, 0)
+    bits = bitmap_get(st.bitmap, sp, pg)
+    return jnp.all(bits == (st.remap >= 0))

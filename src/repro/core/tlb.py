@@ -1,0 +1,93 @@
+"""Split TLB model (Rainbow §II-A / §III-E): set-associative, LRU, two page sizes.
+
+Used by Layer A to simulate the 4 KB-page TLB and the 2 MB-superpage TLB (L1 + L2
+levels per Table IV). Pure-functional: state threads through lax.scan over a trace.
+
+A lookup consults L1 then L2; fills propagate L2 -> L1. The four translation cases of
+Fig. 6 are composed in sim/policies.py from two of these TLBs plus the migration
+bitmap + remap read.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import pytree_dataclass, static_field
+
+
+@pytree_dataclass
+class TLBState:
+    tags: jax.Array  # int64[sets, ways]; -1 invalid
+    lru: jax.Array  # int32[sets, ways] last-touch time
+    sets: int = static_field(default=1)
+    ways: int = static_field(default=1)
+
+
+def tlb_init(entries: int, ways: int) -> TLBState:
+    sets = max(1, entries // ways)
+    return TLBState(
+        tags=jnp.full((sets, ways), -1, jnp.int32),
+        lru=jnp.zeros((sets, ways), jnp.int32),
+        sets=sets,
+        ways=ways,
+    )
+
+
+def tlb_lookup(
+    st: TLBState, vpn: jax.Array, now: jax.Array, fill: bool | jax.Array = True
+) -> tuple[TLBState, jax.Array]:
+    """One lookup (+ LRU fill on miss when fill=True). Returns (state', hit)."""
+    vpn = vpn.astype(jnp.int32)
+    s = (vpn % st.sets).astype(jnp.int32)
+    line = st.tags[s]
+    hit_way = line == vpn
+    hit = hit_way.any()
+    victim = jnp.argmin(st.lru[s])
+    way = jnp.where(hit, jnp.argmax(hit_way), victim).astype(jnp.int32)
+    do_write = hit | jnp.asarray(fill)
+    tags = st.tags.at[s, way].set(jnp.where(do_write, vpn, st.tags[s, way]))
+    lru = st.lru.at[s, way].set(
+        jnp.where(do_write, now.astype(jnp.int32), st.lru[s, way])
+    )
+    return TLBState(tags=tags, lru=lru, sets=st.sets, ways=st.ways), hit
+
+
+def tlb_invalidate(st: TLBState, vpn: jax.Array) -> TLBState:
+    """Shootdown: invalidate one vpn if present (used on DRAM->NVM writeback)."""
+    vpn = vpn.astype(jnp.int32)
+    s = (vpn % st.sets).astype(jnp.int32)
+    line = st.tags[s]
+    tags = st.tags.at[s].set(jnp.where(line == vpn, jnp.int32(-1), line))
+    return TLBState(tags=tags, lru=st.lru, sets=st.sets, ways=st.ways)
+
+
+@pytree_dataclass
+class SplitTLB:
+    """Two-level split TLB: L1 + L2 for one page size (Table IV geometry)."""
+
+    l1: TLBState
+    l2: TLBState
+
+
+def split_tlb_init(
+    l1_entries: int, l1_ways: int, l2_entries: int, l2_ways: int
+) -> SplitTLB:
+    return SplitTLB(
+        l1=tlb_init(l1_entries, l1_ways), l2=tlb_init(l2_entries, l2_ways)
+    )
+
+
+def split_tlb_lookup(
+    st: SplitTLB, vpn: jax.Array, now: jax.Array, fill: bool | jax.Array = True
+) -> tuple[SplitTLB, jax.Array, jax.Array]:
+    """Returns (state', l1_hit, l2_hit). A hit at either level fills upward."""
+    l1, h1 = tlb_lookup(st.l1, vpn, now, fill=False)
+    l2, h2 = tlb_lookup(st.l2, vpn, now, fill=fill)
+    # Fill L1 on L1-miss when the translation was obtained (L2 hit or walk+fill).
+    do_l1_fill = (~h1) & (h2 | jnp.asarray(fill))
+    l1b, _ = tlb_lookup(l1, vpn, now, fill=do_l1_fill)
+    return SplitTLB(l1=l1b, l2=l2), h1, h2
+
+
+def split_tlb_invalidate(st: SplitTLB, vpn: jax.Array) -> SplitTLB:
+    return SplitTLB(l1=tlb_invalidate(st.l1, vpn), l2=tlb_invalidate(st.l2, vpn))

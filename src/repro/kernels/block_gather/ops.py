@@ -1,0 +1,15 @@
+"""Dispatch wrapper for the migration block-gather."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.block_gather.block_gather import block_gather
+from repro.kernels.block_gather.ref import block_gather_ref
+
+
+def migrate_blocks(cap, hot, src, dst, force=None):
+    backend = jax.default_backend()
+    mode = force or ("pallas" if backend == "tpu" else "ref")
+    if mode in ("pallas", "interpret"):
+        return block_gather(cap, hot, src, dst, interpret=(mode == "interpret"))
+    return block_gather_ref(cap, hot, src, dst)

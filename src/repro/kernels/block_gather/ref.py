@@ -1,0 +1,17 @@
+"""Oracle for the block-migration gather kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_gather_ref(
+    cap: jax.Array,  # [NB, block, KVS, hd] capacity pool
+    hot: jax.Array,  # [HOT, block, KVS, hd] hot pool (updated)
+    src: jax.Array,  # int32[K] capacity block ids (-1 = skip lane)
+    dst: jax.Array,  # int32[K] hot slot ids
+) -> jax.Array:
+    ok = src >= 0
+    s = jnp.where(ok, src, 0)
+    d = jnp.where(ok, dst, hot.shape[0])  # OOB -> dropped
+    return hot.at[d].set(cap[s], mode="drop")

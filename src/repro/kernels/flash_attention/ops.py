@@ -1,0 +1,15 @@
+"""Dispatch wrapper for flash attention."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def attention(q, k, v, causal=True, force=None):
+    backend = jax.default_backend()
+    mode = force or ("pallas" if backend == "tpu" else "ref")
+    if mode in ("pallas", "interpret"):
+        return flash_attention(q, k, v, causal=causal, interpret=(mode == "interpret"))
+    return flash_attention_ref(q, k, v, causal=causal)

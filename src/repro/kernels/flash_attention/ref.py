@@ -1,0 +1,24 @@
+"""Oracle for the tiled causal flash-attention kernel (single head-group)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(
+    q: jax.Array,  # [B, S, H, hd]
+    k: jax.Array,  # [B, S, H, hd]  (kv heads pre-expanded to H)
+    v: jax.Array,
+    causal: bool = True,
+) -> jax.Array:
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = s / np.sqrt(q.shape[-1])
+    if causal:
+        sl = q.shape[1]
+        mask = jnp.tril(jnp.ones((sl, sl), bool))
+        s = jnp.where(mask[None, None], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum(
+        "bhqk,bkhd->bqhd", p.astype(q.dtype), v, preferred_element_type=jnp.float32
+    ).astype(q.dtype)

@@ -1,0 +1,22 @@
+"""Dispatch wrapper for the two-stage counter."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.page_counter.page_counter import two_stage_count
+from repro.kernels.page_counter.ref import two_stage_count_ref
+
+
+def count_accesses(
+    sp, page, weight, monitored, num_superpages, pages_per_sp, force=None
+):
+    backend = jax.default_backend()
+    mode = force or ("pallas" if backend == "tpu" else "ref")
+    if mode in ("pallas", "interpret"):
+        return two_stage_count(
+            sp, page, weight, monitored, num_superpages, pages_per_sp,
+            interpret=(mode == "interpret"),
+        )
+    return two_stage_count_ref(
+        sp, page, weight, num_superpages, monitored, pages_per_sp
+    )

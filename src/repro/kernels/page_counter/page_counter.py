@@ -1,0 +1,130 @@
+"""Two-stage access counter — Pallas TPU kernel (paper §III-B in hardware).
+
+The memory-controller counting path as a tiled streaming kernel: accesses arrive
+in VMEM tiles of A_TILE; both counter tables live in VMEM scratch across the
+grid (they are small by design — that is the paper's point: O(mem/2MB) + N*1KB)
+and are flushed to HBM on the last tile.
+
+Scatter-adds inside a tile are expressed as one-hot matmuls — the MXU-friendly
+realization of "CAM + counter array" (TPU has no per-element atomic scatter;
+a [A_TILE, SP] one-hot times a ones-vector IS the histogram).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    monitored_ref,  # int32[N] (SMEM, scalar-prefetch)
+    sp_ref,  # int32[1, A_TILE]
+    page_ref,  # int32[1, A_TILE]
+    w_ref,  # f32[1, A_TILE]
+    s1_out,  # f32[NSP]
+    s2_out,  # f32[N, PAGES]
+    s1_acc,  # scratch f32[NSP]
+    s2_acc,  # scratch f32[N, PAGES]
+    *,
+    nsp: int,
+    pages: int,
+    n_mon: int,
+    tiles: int,
+):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        s1_acc[...] = jnp.zeros_like(s1_acc)
+        s2_acc[...] = jnp.zeros_like(s2_acc)
+
+    sp = sp_ref[0]
+    page = page_ref[0]
+    w = w_ref[0]
+    valid = sp >= 0
+    wv = jnp.where(valid, w, 0.0)
+
+    # stage 1: histogram over superpages via one-hot matmul
+    onehot = (sp[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, nsp), 1)).astype(
+        jnp.float32
+    )  # [A, NSP]
+    s1_acc[...] += jnp.einsum("an,a->n", onehot, wv)
+
+    # stage 2: monitored rows only
+    mon = monitored_ref[...]  # [N]
+    row_eq = (sp[:, None] == mon[None, :]) & (mon >= 0)[None, :]  # [A, N]
+    page_oh = (
+        page[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, pages), 1)
+    ).astype(jnp.float32)  # [A, PAGES]
+    contrib = jnp.einsum(
+        "an,ap->np", row_eq.astype(jnp.float32) * wv[:, None], page_oh
+    )
+    s2_acc[...] += contrib
+
+    @pl.when(t == tiles - 1)
+    def _flush():
+        s1_out[...] = s1_acc[...]
+        s2_out[...] = s2_acc[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_superpages", "pages_per_sp", "a_tile", "interpret")
+)
+def two_stage_count(
+    sp: jax.Array,
+    page: jax.Array,
+    weight: jax.Array,
+    monitored: jax.Array,
+    num_superpages: int,
+    pages_per_sp: int,
+    a_tile: int = 512,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    a = sp.shape[0]
+    tiles = (a + a_tile - 1) // a_tile
+    pad = tiles * a_tile - a
+    if pad:
+        sp = jnp.pad(sp, (0, pad), constant_values=-1)
+        page = jnp.pad(page, (0, pad))
+        weight = jnp.pad(weight, (0, pad))
+    n_mon = monitored.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((1, a_tile), lambda t, mon: (t, 0)),
+            pl.BlockSpec((1, a_tile), lambda t, mon: (t, 0)),
+            pl.BlockSpec((1, a_tile), lambda t, mon: (t, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((num_superpages,), lambda t, mon: (0,)),
+            pl.BlockSpec((n_mon, pages_per_sp), lambda t, mon: (0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((num_superpages,), jnp.float32),
+            pltpu.VMEM((n_mon, pages_per_sp), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _kernel, nsp=num_superpages, pages=pages_per_sp, n_mon=n_mon, tiles=tiles
+    )
+    s1, s2 = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((num_superpages,), jnp.float32),
+            jax.ShapeDtypeStruct((n_mon, pages_per_sp), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("arbitrary",)),
+    )(
+        monitored.astype(jnp.int32),
+        sp.reshape(tiles, a_tile),
+        page.reshape(tiles, a_tile),
+        weight.astype(jnp.float32).reshape(tiles, a_tile),
+    )
+    return s1.astype(jnp.uint32), s2.astype(jnp.uint32)

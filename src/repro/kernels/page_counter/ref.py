@@ -1,0 +1,30 @@
+"""Oracle for the two-stage page-access counter kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def two_stage_count_ref(
+    sp: jax.Array,  # int32[A] superpage per access (-1 = skip)
+    page: jax.Array,  # int32[A] page within superpage
+    weight: jax.Array,  # uint32[A]
+    num_superpages: int,
+    monitored: jax.Array,  # int32[N] monitored superpage ids (-1 = unused row)
+    pages_per_sp: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (stage1 uint32[num_superpages], stage2 uint32[N, pages_per_sp])."""
+    valid = sp >= 0
+    w = jnp.where(valid, weight, 0).astype(jnp.uint32)
+    s1 = jnp.zeros((num_superpages,), jnp.uint32).at[
+        jnp.where(valid, sp, 0)
+    ].add(w)
+    eq = sp[:, None] == monitored[None, :]
+    eq &= (monitored >= 0)[None, :]
+    row = jnp.argmax(eq, axis=1)
+    hit = eq.any(axis=1)
+    n = monitored.shape[0]
+    flat = jnp.zeros((n * pages_per_sp,), jnp.uint32).at[
+        jnp.where(hit, row * pages_per_sp + page, 0)
+    ].add(jnp.where(hit, w, 0))
+    return s1, flat.reshape(n, pages_per_sp)

@@ -1,0 +1,20 @@
+"""Jit'd dispatch wrapper: Pallas kernel on TPU, jnp oracle elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rainbow_attention.rainbow_attention import rainbow_attention
+from repro.kernels.rainbow_attention.ref import rainbow_attention_ref
+
+
+def paged_decode_attention(
+    q, pool_k, pool_v, vidx, length, force: str | None = None
+):
+    """force: None (auto), "pallas", "interpret", "ref"."""
+    backend = jax.default_backend()
+    mode = force or ("pallas" if backend == "tpu" else "ref")
+    if mode == "pallas":
+        return rainbow_attention(q, pool_k, pool_v, vidx, length, interpret=False)
+    if mode == "interpret":
+        return rainbow_attention(q, pool_k, pool_v, vidx, length, interpret=True)
+    return rainbow_attention_ref(q, pool_k, pool_v, vidx, length)

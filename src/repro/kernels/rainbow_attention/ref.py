@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the Rainbow paged decode attention kernel.
+
+Semantics: single-token decode attention where KV blocks are read through the
+two-tier translation. The kernel consumes *virtual block indices* (vidx) into
+the concatenated [capacity ++ hot] pool — the translation itself (bitmap +
+remap -> vidx) is repro.core.remap.translate and is tested separately.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rainbow_attention_ref(
+    q: jax.Array,  # [B, HP, hd]
+    pool_k: jax.Array,  # [NPOOL, block, KVS, hd]
+    pool_v: jax.Array,  # [NPOOL, block, KVS, hd]
+    vidx: jax.Array,  # int32[B, nblk] virtual block ids (translated)
+    length: jax.Array,  # int32 valid tokens (uniform across batch)
+) -> jax.Array:
+    """Returns [B, HP, hd]."""
+    b, hp, hd = q.shape
+    nblk = vidx.shape[1]
+    block = pool_k.shape[1]
+    kvs = pool_k.shape[2]
+    k = pool_k[vidx]  # [B, nblk, block, KVS, hd]
+    v = pool_v[vidx]
+    k = k.reshape(b, nblk * block, kvs, hd)
+    v = v.reshape(b, nblk * block, kvs, hd)
+    m = hp // kvs
+    k = jnp.repeat(k, m, axis=2)
+    v = jnp.repeat(v, m, axis=2)
+    s = jnp.einsum("bhk,bshk->bhs", q, k, preferred_element_type=jnp.float32)
+    s = s / np.sqrt(hd)
+    pos = jnp.arange(nblk * block)
+    s = jnp.where(pos[None, None, :] < length, s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum(
+        "bhs,bshk->bhk", p.astype(q.dtype), v, preferred_element_type=jnp.float32
+    ).astype(q.dtype)

@@ -1,0 +1,9 @@
+"""Mesh axis conventions (DESIGN.md §5).
+
+Production meshes: ("data", "model") single-pod, ("pod", "data", "model")
+multi-pod. Batch/data-parallel dims shard over BATCH_AXES (the constrainer drops
+axes absent from the active mesh, so model code is mesh-shape-agnostic).
+"""
+BATCH_AXES = ("pod", "data")
+MODEL_AXIS = "model"
+SEQ_AXIS = "data"  # sequence-parallel dims reuse the data axis (long_500k)

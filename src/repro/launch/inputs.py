@@ -1,0 +1,75 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape x step-kind) cell.
+
+No device allocation: the dry-run lowers against these. Modality frontends are
+stubs per the assignment: [audio] supplies precomputed frame embeddings, [vlm]
+supplies patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.axes import BATCH_AXES
+from repro.models import model as M
+from repro.models.config import ModelConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def seq_layout(cfg: ModelConfig, seq_len: int) -> dict[str, int]:
+    """How the assigned seq_len splits across modalities/enc-dec."""
+    if cfg.is_encoder_decoder:
+        enc = seq_len // cfg.encoder_seq_divisor
+        return {"enc": enc, "dec": seq_len - enc, "text": seq_len - enc}
+    if cfg.family == "vlm":
+        nv = cfg.num_vision_tokens
+        return {"vision": nv, "text": seq_len - nv, "dec": seq_len}
+    return {"text": seq_len, "dec": seq_len}
+
+
+def train_inputs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    lay = seq_layout(cfg, s)
+    st = lay["text"]
+    batch = {
+        "tokens": SDS((b, st), jnp.int32),
+        "targets": SDS((b, st), jnp.int32),
+        "loss_mask": SDS((b, st), jnp.float32),
+    }
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = SDS((b, lay["vision"], cfg.d_model), jnp.bfloat16)
+    if cfg.is_encoder_decoder:
+        batch["frames"] = SDS((b, lay["enc"], cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    batch = train_inputs(cfg, shape)
+    batch.pop("targets")
+    batch.pop("loss_mask")
+    return batch
+
+
+def decode_inputs(
+    cfg: ModelConfig, shape: ShapeConfig, tp: int
+) -> tuple[dict[str, Any], Any, int]:
+    """Returns (token batch SDS, cache SDS tree, cache max_len)."""
+    b, s = shape.global_batch, shape.seq_len
+    max_len = s // cfg.encoder_seq_divisor if cfg.is_encoder_decoder else s
+    tokens = {"tokens": SDS((b, 1), jnp.int32)}
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, b, max_len, tp=tp))
+    return tokens, cache, max_len
+
+
+def batch_is_replicated(shape: ShapeConfig, dp_size: int) -> bool:
+    return shape.global_batch % dp_size != 0
+
+
+def seq_axis_for(cfg: ModelConfig, shape: ShapeConfig, dp_size: int):
+    """Shard the KV-cache sequence dim over 'data' when batch can't use it."""
+    if batch_is_replicated(shape, dp_size) and not cfg.attn_free:
+        return "data"
+    return None

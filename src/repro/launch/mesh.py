@@ -1,0 +1,33 @@
+"""Production mesh construction (multi-pod dry-run requirement).
+
+Defined as functions (never module-level constants) so importing this module never
+touches jax device state. The dry-run sets XLA_FLAGS host-device-count=512 before
+any jax import; smoke tests and benches see the real single CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(devices: int | None = None, model: int = 1):
+    """Small mesh over available devices (for CPU integration tests)."""
+    n = devices or len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def mesh_dp_size(mesh) -> int:
+    n = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            n *= mesh.shape[ax]
+    return n
+
+
+def mesh_tp_size(mesh) -> int:
+    return mesh.shape.get("model", 1)

@@ -1,0 +1,61 @@
+"""Sharding-constraint utilities: mesh-aware spec filtering.
+
+Model code annotates activations with full logical specs (e.g. P(("pod","data"),
+None, "model")). `make_constrainer(mesh)` drops axis names the mesh doesn't have,
+so the same model runs on the single-pod (data, model) mesh, the multi-pod
+(pod, data, model) mesh, or a 1-device CPU test mesh (sc=None skips entirely).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Constrainer = Optional[Callable[[jax.Array, P], jax.Array]]
+
+
+def filter_spec(spec: P, mesh: Mesh) -> P:
+    """Drop axis names not present in `mesh` from a PartitionSpec."""
+    names = set(mesh.axis_names)
+
+    def keep(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, str):
+            return entry if entry in names else None
+        kept = tuple(a for a in entry if a in names)
+        return kept if kept else None
+
+    return P(*(keep(e) for e in spec))
+
+
+def filter_tree(tree, mesh: Mesh):
+    """Filter a pytree of PartitionSpecs against the mesh."""
+    return jax.tree.map(
+        lambda s: filter_spec(s, mesh), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def make_constrainer(mesh: Mesh, strip_batch: bool = False) -> Constrainer:
+    """strip_batch: drop batch-axis entries (batch-replicated cells, e.g. B=1)."""
+    from repro.launch.axes import BATCH_AXES
+
+    def sc(x: jax.Array, spec: P) -> jax.Array:
+        if strip_batch:
+            spec = P(*(None if e == BATCH_AXES else e for e in spec))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, filter_spec(spec, mesh))
+        )
+
+    return sc
+
+
+def sharding_tree(tree, mesh: Mesh):
+    """PartitionSpec tree -> NamedSharding tree (for jit in/out_shardings)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, filter_spec(s, mesh)),
+        tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,346 @@
+"""RainbowKVCache: the paper's two-tier page management applied to KV caches.
+
+Mapping (DESIGN.md §2): per-sequence KV is stored in a *capacity pool* (the NVM
+analogue — host DRAM on a real deployment) at superblock granularity; hot KV
+blocks are cached in a small *hot pool* (the DRAM analogue — HBM). A residency
+bitmap + remap table (core.remap) redirect block reads; superblocks are never
+re-laid-out, so promotion/demotion never touches the block table (the
+"no-splinter / no-shootdown" property).
+
+"Access" = attention mass a block receives during decode (strictly more precise
+than the paper's post-LLC reference counts — adaptation note 3). Two-stage
+counting (core.counting) runs at superblock then block granularity; admission is
+the utility test (core.migration) with (HBM bw, host-link bw) timings.
+
+The pure-JAX read path realizes translation as ONE gather into a virtually
+concatenated [capacity ++ hot] pool — the TPU-idiomatic form of Fig. 6's
+indirection. kernels/rainbow_attention implements the same recurrence tiled.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import counting, migration
+from repro.core.migration import TimingParams, make_timing
+from repro.core.remap import RemapState, remap_evict, remap_init, remap_install, translate
+from repro.utils import pytree_dataclass, static_field
+
+
+@pytree_dataclass
+class PagedConfig:
+    block_size: int = static_field(default=16)  # tokens per block (4KB-page analogue)
+    blocks_per_seq: int = static_field(default=512)  # blocks per superblock run
+    hot_slots: int = static_field(default=256)  # hot-pool capacity (blocks/layer)
+    top_n: int = static_field(default=16)  # monitored superblocks (stage 2)
+    max_promotions: int = static_field(default=64)  # per interval
+    interval_steps: int = static_field(default=8)  # decode steps per interval
+    quantize: bool = static_field(default=False)  # int8 pools + bf16 scales
+                                                  # (beyond-paper §Perf A3)
+
+
+def default_timing() -> TimingParams:
+    """HBM vs host-link costs in ns-per-block units (v5e-class: 819 GB/s HBM,
+    ~50 GB/s host link; T_mig = one block DMA + setup)."""
+    return make_timing(
+        t_nr=100.0, t_nw=180.0, t_dr=8.0, t_dw=12.0, t_mig=400.0, t_writeback=400.0
+    )
+
+
+@pytree_dataclass
+class RainbowKV:
+    """Per-layer-stacked paged KV state for a decode batch.
+
+    cap_k/cap_v: [L, B*blocks_per_seq, block, KVS, hd]  capacity pool
+    hot_k/hot_v: [L, hot_slots, block, KVS, hd]         hot pool
+    remap:       RemapState over (superblock=seq, page=block) — shared by layers
+                 (hotness is measured summed over layers; per-layer remap is a
+                 config away but multiplies table traffic for little gain)
+    s1/s2:       two-stage counters (stage 1 per superblock, stage 2 per block)
+    dram:        hot-pool slot manager (free/clean/dirty; KV blocks are clean)
+    length:      int32 current sequence length (uniform across batch)
+    step_in_interval: int32
+    """
+
+    cap_k: jax.Array
+    cap_v: jax.Array
+    hot_k: jax.Array
+    hot_v: jax.Array
+    remap: RemapState
+    s1: counting.Stage1State
+    s2: counting.Stage2State
+    dram: migration.DramState
+    threshold: jax.Array
+    length: jax.Array
+    step_in_interval: jax.Array
+
+
+def paged_init(cfg, pcfg: PagedConfig, batch: int, tp: int, layers: int) -> RainbowKV:
+    kvs = cfg.kv_store(tp)
+    hd = cfg.head_dim
+    dt = jnp.int8 if pcfg.quantize else jnp.dtype(cfg.dtype)
+    nb = batch * pcfg.blocks_per_seq
+    shape_cap = (layers, nb, pcfg.block_size, kvs, hd)
+    shape_hot = (layers, pcfg.hot_slots, pcfg.block_size, kvs, hd)
+    kv = RainbowKV(
+        cap_k=jnp.zeros(shape_cap, dt),
+        cap_v=jnp.zeros(shape_cap, dt),
+        hot_k=jnp.zeros(shape_hot, dt),
+        hot_v=jnp.zeros(shape_hot, dt),
+        remap=remap_init(batch, pcfg.blocks_per_seq),
+        s1=counting.stage1_init(batch),
+        s2=counting.stage2_init(pcfg.top_n, pcfg.blocks_per_seq),
+        dram=migration.dram_init(pcfg.hot_slots),
+        threshold=jnp.zeros((), jnp.float32),
+        length=jnp.zeros((), jnp.int32),
+        step_in_interval=jnp.zeros((), jnp.int32),
+    )
+    return kv
+
+
+def paged_scales_init(pcfg: PagedConfig, batch: int, kvs: int, layers: int):
+    """int8 mode: per-token, per-kv-head scale side pytree (1 fp32 per head_dim
+    payload — 1/64 the pool bytes at hd=128 with fp32 scales)."""
+    nb = batch * pcfg.blocks_per_seq
+    return {
+        "cap_k": jnp.zeros((layers, nb, pcfg.block_size, kvs), jnp.float32),
+        "cap_v": jnp.zeros((layers, nb, pcfg.block_size, kvs), jnp.float32),
+        "hot_k": jnp.zeros((layers, pcfg.hot_slots, pcfg.block_size, kvs), jnp.float32),
+        "hot_v": jnp.zeros((layers, pcfg.hot_slots, pcfg.block_size, kvs), jnp.float32),
+    }
+
+
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: [..., hd] -> (int8[..., hd], scale[...]) per-channel symmetric."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) + 1e-8
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def paged_cache_specs(batch_axes="data", model_axis="model") -> RainbowKV:
+    """PartitionSpec tree matching paged_init's structure (for pjit shardings).
+
+    Capacity pools shard over the flattened (seq x block) dim (batch-major) and
+    kv-head slots; hot pools shard kv-heads only (the hot set is a global
+    resource); tables/counters are tiny and replicate.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.counting import Stage1State, Stage2State
+    from repro.core.migration import DramState
+
+    cap = P(None, batch_axes, None, model_axis, None)
+    hot = P(None, None, None, model_axis, None)
+    return RainbowKV(
+        cap_k=cap, cap_v=cap, hot_k=hot, hot_v=hot,
+        remap=RemapState(bitmap=P(None, None), remap=P(None, None)),
+        s1=Stage1State(counts=P(None)),
+        s2=Stage2State(psn=P(None), counts=P(None, None)),
+        dram=DramState(*([P(None)] * 6)),
+        threshold=P(), length=P(), step_in_interval=P(),
+    )
+
+
+def block_of(pcfg: PagedConfig, pos: jax.Array) -> jax.Array:
+    return pos // pcfg.block_size
+
+
+def append_token(
+    kv: RainbowKV, pcfg: PagedConfig, layer_slice: None, k_new: jax.Array, v_new: jax.Array
+) -> RainbowKV:
+    """Write one token's K/V into the capacity pool (all layers at once).
+
+    k_new/v_new: [L, B, KVS, hd]. New tokens go to their home capacity block —
+    DRAM-preferred placement happens via promotion (fresh blocks are usually
+    hot and get promoted at the next interval).
+    """
+    lyr, b, kvs, hd = k_new.shape
+    pos = kv.length
+    blk = pos // pcfg.block_size
+    off = pos % pcfg.block_size
+    seq_ids = jnp.arange(b)
+    flat_block = seq_ids * pcfg.blocks_per_seq + blk  # [B]
+    cap_k = kv.cap_k.at[:, flat_block, off].set(k_new.astype(kv.cap_k.dtype))
+    cap_v = kv.cap_v.at[:, flat_block, off].set(v_new.astype(kv.cap_v.dtype))
+    # Paper §III-E cases 1/2: writes to a migrated page must land on the fast
+    # copy too, else reads through the remap see stale data. (We also keep the
+    # capacity copy fresh, so evictions are always "clean" — KV blocks never
+    # pay T_writeback; exactly the clean-list fast path the paper optimizes.)
+    resident, slot = translate(kv.remap, seq_ids, jnp.full((b,), blk))
+    slot_safe = jnp.where(resident, slot, kv.hot_k.shape[1])  # OOB -> dropped
+    hot_k = kv.hot_k.at[:, slot_safe, off].set(
+        k_new.astype(kv.hot_k.dtype), mode="drop"
+    )
+    hot_v = kv.hot_v.at[:, slot_safe, off].set(
+        v_new.astype(kv.hot_v.dtype), mode="drop"
+    )
+    return _replace(kv, cap_k=cap_k, cap_v=cap_v, hot_k=hot_k, hot_v=hot_v)
+
+
+def append_token_q8(
+    kv: RainbowKV, pcfg: PagedConfig, scales: dict, k_new: jax.Array, v_new: jax.Array
+) -> tuple[RainbowKV, dict]:
+    """int8-mode append: quantize per (layer, seq, kv-head), write pools+scales."""
+    lyr, b, kvs, hd = k_new.shape
+    pos = kv.length
+    blk = pos // pcfg.block_size
+    off = pos % pcfg.block_size
+    seq_ids = jnp.arange(b)
+    flat_block = seq_ids * pcfg.blocks_per_seq + blk
+    qk, sk = quantize_kv(k_new)
+    qv, sv = quantize_kv(v_new)
+    cap_k = kv.cap_k.at[:, flat_block, off].set(qk)
+    cap_v = kv.cap_v.at[:, flat_block, off].set(qv)
+    scales = dict(scales)
+    scales["cap_k"] = scales["cap_k"].at[:, flat_block, off].set(sk)
+    scales["cap_v"] = scales["cap_v"].at[:, flat_block, off].set(sv)
+    # mirror writes into promoted blocks (paper case 1/2, as in append_token)
+    resident, slot = translate(kv.remap, seq_ids, jnp.full((b,), blk))
+    slot_safe = jnp.where(resident, slot, kv.hot_k.shape[1])
+    hot_k = kv.hot_k.at[:, slot_safe, off].set(qk, mode="drop")
+    hot_v = kv.hot_v.at[:, slot_safe, off].set(qv, mode="drop")
+    scales["hot_k"] = scales["hot_k"].at[:, slot_safe, off].set(sk, mode="drop")
+    scales["hot_v"] = scales["hot_v"].at[:, slot_safe, off].set(sv, mode="drop")
+    return _replace(kv, cap_k=cap_k, cap_v=cap_v, hot_k=hot_k, hot_v=hot_v), scales
+
+
+def promote_scales(scales: dict, pcfg: PagedConfig, plan, cand_sp, cand_pg) -> dict:
+    """Mirror end_interval_promote's block copies on the scale side pytree."""
+    src = jnp.where(plan.migrate, cand_sp * pcfg.blocks_per_seq + cand_pg, 0).astype(jnp.int32)
+    dst = jnp.where(plan.migrate, plan.dst_slot, pcfg.hot_slots).astype(jnp.int32)
+    out = dict(scales)
+    out["hot_k"] = scales["hot_k"].at[:, dst].set(scales["cap_k"][:, src], mode="drop")
+    out["hot_v"] = scales["hot_v"].at[:, dst].set(scales["cap_v"][:, src], mode="drop")
+    return out
+
+
+def _replace(kv: RainbowKV, **kw) -> RainbowKV:
+    import dataclasses
+
+    return dataclasses.replace(kv, **kw)
+
+
+def gather_layer_kv(
+    kv: RainbowKV, pcfg: PagedConfig, layer: jax.Array, batch: int
+) -> tuple[jax.Array, jax.Array]:
+    """Translated read of one layer's KV: [B, blocks_per_seq, block, KVS, hd].
+
+    Single-gather translation: virtual pool = capacity ++ hot; resident blocks
+    redirect to num_cap + slot (Fig. 6 cases via one indirection).
+    """
+    nb = batch * pcfg.blocks_per_seq
+    blocks = jnp.arange(pcfg.blocks_per_seq)
+    seqs = jnp.arange(batch)
+    sp = seqs[:, None].repeat(pcfg.blocks_per_seq, 1)
+    pg = blocks[None, :].repeat(batch, 0)
+    resident, slot = translate(kv.remap, sp, pg)
+    home = (sp * pcfg.blocks_per_seq + pg).astype(jnp.int32)
+    vidx = jnp.where(resident, nb + slot, home)  # [B, blocks_per_seq]
+
+    pool_k = jnp.concatenate([kv.cap_k[layer], kv.hot_k[layer]], axis=0)
+    pool_v = jnp.concatenate([kv.cap_v[layer], kv.hot_v[layer]], axis=0)
+    return pool_k[vidx], pool_v[vidx]
+
+
+def observe_block_mass(
+    kv: RainbowKV, pcfg: PagedConfig, mass: jax.Array
+) -> RainbowKV:
+    """Record per-block attention mass for this decode step.
+
+    mass: float32[B, blocks_per_seq] — summed softmax mass per KV block
+    (aggregated over layers/heads by the caller). Quantized to integer counts
+    for the paper's 15-bit counters.
+    """
+    b, nblk = mass.shape
+    q = jnp.clip((mass * 64.0), 0, 1024).astype(jnp.uint32)
+    seq_ids = jnp.arange(b, dtype=jnp.int32)
+    s1 = counting.Stage1State(
+        counts=counting._saturating_add_u16(
+            kv.s1.counts, seq_ids, q.sum(axis=1)
+        )
+    )
+    # stage 2: only monitored superblocks count at block grain
+    flat_sp = seq_ids[:, None].repeat(nblk, 1).reshape(-1)
+    flat_pg = jnp.arange(nblk, dtype=jnp.int32)[None].repeat(b, 0).reshape(-1)
+    s2 = counting.stage2_record(
+        kv.s2, flat_sp, flat_pg, jnp.zeros_like(flat_sp, bool), 1
+    )
+    # weight the record by quantized mass: re-add (q-1) where q>1
+    # (stage2_record adds 1 per lane; cheaper than a custom weighted path)
+    extra = (q.reshape(-1) - 1).clip(0)
+    slot = counting._psn_to_slot(kv.s2.psn, flat_sp)
+    valid = slot >= 0
+    n, p = s2.counts.shape
+    fidx = jnp.where(valid, slot * p + flat_pg, 0)
+    flat = counting._saturating_add_u16(
+        s2.counts.reshape(-1), fidx, jnp.where(valid, extra, 0)
+    )
+    s2 = counting.Stage2State(psn=s2.psn, counts=flat.reshape(n, p))
+    return _replace(kv, s1=s1, s2=s2, step_in_interval=kv.step_in_interval + 1)
+
+
+def end_interval_promote(
+    kv: RainbowKV, pcfg: PagedConfig, timing: TimingParams | None = None
+) -> tuple[RainbowKV, dict]:
+    """Close the interval: pick hot blocks (two-stage), admit into the hot pool
+    (utility test), copy block payloads, update remap. Mirrors rainbow.end_interval
+    with the block-copy step materialized on the KV pools."""
+    timing = timing or default_timing()
+    b = kv.s1.counts.shape[0]
+    reads = counting.counter_value(kv.s2.counts).astype(jnp.float32)
+    n, p = reads.shape
+    flat_sp = jnp.repeat(kv.s2.psn, p)
+    flat_pg = jnp.tile(jnp.arange(p, dtype=jnp.int32), n)
+    flat_r = reads.reshape(-1)
+
+    k = pcfg.max_promotions
+    score = migration.migration_benefit(flat_r, jnp.zeros_like(flat_r), timing)
+    score = jnp.where(flat_sp >= 0, score, -jnp.inf)
+    already, _ = translate(kv.remap, jnp.maximum(flat_sp, 0), flat_pg)
+    # also never promote blocks beyond the current length
+    in_range = flat_pg <= (kv.length // pcfg.block_size)
+    score = jnp.where(already | ~in_range, -jnp.inf, score)
+    _, top_idx = jax.lax.top_k(score, min(k, score.shape[0]))
+    cand_sp = jnp.where(score[top_idx] > -jnp.inf, flat_sp[top_idx], -1)
+    cand_pg = flat_pg[top_idx]
+    cand_r = flat_r[top_idx]
+
+    plan = migration.plan_migrations(
+        cand_sp, cand_pg, cand_r, jnp.zeros_like(cand_r),
+        kv.dram, timing, kv.threshold,
+    )
+    dram = migration.dram_apply_plan(kv.dram, plan, cand_sp, cand_pg, jnp.int32(0))
+    rm = remap_evict(kv.remap, plan.evict_sp, plan.evict_page)
+    rm = remap_install(rm, jnp.where(plan.migrate, cand_sp, -1), cand_pg, plan.dst_slot)
+
+    # ---- block payload copies (the block_gather kernel's reference path) ----
+    src = jnp.where(
+        plan.migrate, cand_sp * pcfg.blocks_per_seq + cand_pg, 0
+    ).astype(jnp.int32)
+    # invalid lanes scatter out of bounds and are dropped (no slot-0 races)
+    dst = jnp.where(plan.migrate, plan.dst_slot, pcfg.hot_slots).astype(jnp.int32)
+    gathered_k = kv.cap_k[:, src]  # [L, K, block, KVS, hd]
+    gathered_v = kv.cap_v[:, src]
+    hot_k = kv.hot_k.at[:, dst].set(gathered_k, mode="drop")
+    hot_v = kv.hot_v.at[:, dst].set(gathered_v, mode="drop")
+
+    n_migrated = plan.migrate.sum()
+    threshold = migration.adapt_threshold(kv.threshold, (plan.evict_sp >= 0).sum())
+    new_psn, _ = counting.select_top_n(kv.s1, pcfg.top_n)
+    new = _replace(
+        kv,
+        hot_k=hot_k, hot_v=hot_v, remap=rm, dram=migration.dram_new_interval(dram),
+        s1=counting.stage1_init(b),
+        s2=counting.stage2_begin(new_psn, pcfg.blocks_per_seq),
+        threshold=threshold,
+        step_in_interval=jnp.zeros((), jnp.int32),
+    )
+    return new, {"promoted": n_migrated, "evicted": (plan.evict_sp >= 0).sum(),
+                 "plan": plan, "cand_sp": cand_sp, "cand_pg": cand_pg}

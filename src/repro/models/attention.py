@@ -1,0 +1,247 @@
+"""GQA attention with TP head padding, KV caches, dense + chunked (flash-style)
+implementations, sliding windows, and cross-attention (enc-dec).
+
+TP layout (DESIGN.md §5): query heads padded to HP = ceil(H/tp)*tp (dead heads have
+zeroed output rows — exact outputs, wasted FLOPs show up in the MODEL_FLOPS ratio);
+kv heads stored in KVS = cfg.kv_store(tp) slots, slot j holding original head
+(j*KV)//KVS (weights replicated at init). HP % KVS == 0 always, so the q->kv map is
+a *local consecutive repeat* that GSPMD executes without cross-shard traffic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import Params, dtype_of, normal_init, rms_head_norm, rope
+
+NEG_INF = -2.0e38  # fp32-safe mask value
+
+
+def _slot_to_orig(kv: int, kvs: int) -> np.ndarray:
+    return (np.arange(kvs) * kv) // kvs
+
+
+def attn_init(cfg, key, tp: int, stacked: int | None = None, cross: bool = False) -> Params:
+    dt = dtype_of(cfg)
+    d, hd = cfg.d_model, cfg.head_dim
+    hp = cfg.padded_heads(tp)
+    kvs = cfg.kv_store(tp)
+    kv = cfg.num_kv_heads
+    lead = () if stacked is None else (stacked,)
+    ks = jax.random.split(key, 5)
+    scale_out = 0.02 / max(1.0, (2 * cfg.num_layers) ** 0.5)
+
+    wq = normal_init(ks[0], (*lead, d, hp, hd), 0.02, dt)
+    # draw original kv heads, then place into slots (replication for kv < tp)
+    wk_base = normal_init(ks[1], (*lead, d, kv, hd), 0.02, dt)
+    wv_base = normal_init(ks[2], (*lead, d, kv, hd), 0.02, dt)
+    sl = _slot_to_orig(kv, kvs)
+    wk = jnp.take(wk_base, jnp.asarray(sl), axis=-2)
+    wv = jnp.take(wv_base, jnp.asarray(sl), axis=-2)
+    wo = normal_init(ks[3], (*lead, hp, hd, d), scale_out, dt)
+    # zero output rows of dead (padded) query heads -> exact original function
+    if hp != cfg.num_heads:
+        head_alive = jnp.arange(hp) < cfg.num_heads
+        wo = wo * head_alive[..., :, None, None].astype(wo.dtype)
+    p = {"wq": wq, "wk": wk, "wv": wv, "wo": wo}
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((*lead, hd), jnp.float32)
+        p["k_norm"] = jnp.ones((*lead, hd), jnp.float32)
+    return p
+
+
+def attn_specs(cfg, stacked: bool = False, cross: bool = False) -> Params:
+    l = (None,) if stacked else ()
+    p = {
+        "wq": P(*l, None, "model", None),
+        "wk": P(*l, None, "model", None),
+        "wv": P(*l, None, "model", None),
+        "wo": P(*l, "model", None, None),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = P(*l, None)
+        p["k_norm"] = P(*l, None)
+    return p
+
+
+def _expand_kv(k: jax.Array, hp: int) -> jax.Array:
+    """Repeat kv slots to match query heads (local under TP: consecutive repeat)."""
+    b, s, kvs, hd = k.shape
+    m = hp // kvs
+    if m == 1:
+        return k
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kvs, m, hd)).reshape(
+        b, s, kvs * m, hd
+    )
+
+
+def _causal_window_mask(
+    q_pos: jax.Array, k_pos: jax.Array, window, causal: bool
+) -> jax.Array:
+    """bool[?, Q, K] mask; window may be a traced scalar (0 = unlimited)."""
+    rel = q_pos[..., :, None] - k_pos[..., None, :]
+    mask = jnp.ones(rel.shape, jnp.bool_)
+    if causal:
+        mask &= rel >= 0
+    w = jnp.asarray(window)
+    mask &= (w <= 0) | (rel < w)
+    return mask
+
+
+def qkv_project(cfg, p: Params, x: jax.Array, positions, *, use_rope: bool) -> tuple:
+    """x -> (q [B,S,HP,hd], k/v [B,S,KVS,hd]) with qk-norm + RoPE applied."""
+    acc = jnp.float32
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"], preferred_element_type=acc).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"], preferred_element_type=acc).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"], preferred_element_type=acc).astype(x.dtype)
+    if "q_norm" in p:
+        q = rms_head_norm(p["q_norm"], q)
+        k = rms_head_norm(p["k_norm"], k)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attend_dense(
+    q: jax.Array,  # [B, Sq, HP, hd]
+    k: jax.Array,  # [B, Sk, KVS, hd]
+    v: jax.Array,
+    mask: jax.Array | None,  # bool broadcastable to [B, HP, Sq, Sk]
+) -> jax.Array:
+    """Reference O(Sq*Sk)-memory attention (baseline path)."""
+    hp = q.shape[2]
+    k = _expand_kv(k, hp)
+    v = _expand_kv(v, hp)
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqhk,bshk->bhqs", q, k, preferred_element_type=jnp.float32)
+    scores = scores * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshk->bqhk", w, v, preferred_element_type=jnp.float32).astype(
+        q.dtype
+    )
+
+
+def attend_chunked(
+    q: jax.Array,  # [B, Sq, HP, hd]
+    k: jax.Array,  # [B, Sk, KVS, hd]
+    v: jax.Array,
+    q_pos: jax.Array,  # int32[Sq]
+    k_pos: jax.Array,  # int32[Sk]
+    window,
+    causal: bool,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style online-softmax over KV chunks: O(Sq*chunk) score memory.
+
+    Pure-JAX (lowers on any backend); the Pallas flash kernel is the TPU-tiled
+    version of the same recurrence (kernels/flash_attention).
+    """
+    b, sq, hp, hd = q.shape
+    sk = k.shape[1]
+    chunk = min(chunk, sk)
+    n_chunks = (sk + chunk - 1) // chunk
+    pad = n_chunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-(10**9))
+    k = _expand_kv(k, hp)
+    v = _expand_kv(v, hp)
+    kc = k.reshape(b, n_chunks, chunk, hp, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, hp, hd).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(n_chunks, chunk)
+    scale = 1.0 / np.sqrt(hd)
+
+    def body(carry, xs):
+        m, l, acc = carry  # [B,HP,Sq], [B,HP,Sq], [B,Sq,HP,hd]
+        kb, vb, pb = xs
+        s = jnp.einsum("bqhk,bshk->bhqs", q, kb, preferred_element_type=jnp.float32)
+        s = s * scale
+        mask = _causal_window_mask(q_pos[None], pb[None], window, causal)  # [1,Sq,C]
+        mask &= (pb >= 0)[None, None, :]
+        s = jnp.where(mask[:, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        pexp = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + pexp.sum(-1)
+        acc_new = acc * alpha.transpose(0, 2, 1)[..., None] + jnp.einsum(
+            "bhqs,bshk->bqhk", pexp.astype(q.dtype), vb, preferred_element_type=jnp.float32
+        )
+        return (m_new, l_new, acc_new), None
+
+    from repro.models.unroll_flag import unroll as _unroll
+
+    m0 = jnp.full((b, hp, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hp, sq), jnp.float32)
+    acc0 = jnp.zeros((b, sq, hp, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (kc, vc, pc), unroll=_unroll(n_chunks)
+    )
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+def attn_output(p: Params, o: jax.Array) -> jax.Array:
+    return jnp.einsum(
+        "bqhk,hkd->bqd", o, p["wo"], preferred_element_type=jnp.float32
+    ).astype(o.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (flat / dense layout; the Rainbow paged cache lives in repro.memory)
+# ---------------------------------------------------------------------------
+
+
+def cache_init(cfg, batch: int, max_len: int, tp: int, layers: int) -> Params:
+    kvs = cfg.kv_store(tp)
+    dt = dtype_of(cfg)
+    shape = (layers, batch, max_len, kvs, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def cache_specs(batch_axes, seq_axis=None) -> Params:
+    spec = P(None, batch_axes, seq_axis, "model", None)
+    return {"k": spec, "v": spec}
+
+
+def cache_update(
+    cache_k: jax.Array,  # [B, S_max, KVS, hd]  (single layer slice)
+    cache_v: jax.Array,
+    k_new: jax.Array,  # [B, S_new, KVS, hd]
+    v_new: jax.Array,
+    start: jax.Array,  # int32 scalar write offset
+) -> tuple[jax.Array, jax.Array]:
+    ck = jax.lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype), (0, start, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype), (0, start, 0, 0))
+    return ck, cv
+
+
+def decode_attend(
+    q: jax.Array,  # [B, 1, HP, hd]
+    cache_k: jax.Array,  # [B, S_max, KVS, hd]
+    cache_v: jax.Array,
+    cur_len: jax.Array,  # int32 valid prefix length (q is at position cur_len-1)
+    window,
+) -> jax.Array:
+    """Single-token attention over the cache (mask-based; baseline path)."""
+    b, smax, kvs, hd = cache_k.shape
+    hp = q.shape[2]
+    k = _expand_kv(cache_k, hp)
+    v = _expand_kv(cache_v, hp)
+    scale = 1.0 / np.sqrt(hd)
+    s = jnp.einsum("bqhk,bshk->bhqs", q, k, preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(smax)
+    q_pos = cur_len - 1
+    valid = pos <= q_pos
+    w = jnp.asarray(window)
+    valid &= (w <= 0) | (pos > q_pos - w)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshk->bqhk", p, v, preferred_element_type=jnp.float32).astype(
+        q.dtype
+    )

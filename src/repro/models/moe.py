@@ -1,0 +1,121 @@
+"""Mixture-of-Experts with capacity-bounded sort/gather dispatch + shared experts.
+
+Dispatch (Megablocks/MaxText-style, all static shapes):
+  router top-k -> flatten (token, k) slots -> argsort by expert -> rank within
+  expert via sorted-segment position -> scatter into [E, C, D] buffers (slots past
+  capacity dropped) -> per-expert batched ffn -> gather back, weighted by gate.
+
+Expert dim E is sharded over "model" (EP inside the TP axis); the token->expert
+scatter/gather induces the all-to-all-equivalent resharding under GSPMD.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import Params, dtype_of, mlp_init, mlp_specs, normal_init
+
+
+def _padded_experts(cfg, tp: int) -> int:
+    e = cfg.moe_num_experts
+    return ((e + tp - 1) // tp) * tp
+
+
+def moe_init(cfg, key, tp: int, stacked: int | None = None) -> Params:
+    dt = dtype_of(cfg)
+    d, fe = cfg.d_model, cfg.moe_d_ff
+    ep = _padded_experts(cfg, tp)
+    lead = () if stacked is None else (stacked,)
+    ks = jax.random.split(key, 6)
+    scale_out = 0.02 / max(1.0, (2 * cfg.num_layers) ** 0.5)
+    p = {
+        "router": normal_init(ks[0], (*lead, d, ep), 0.02, jnp.float32),
+        "wi": normal_init(ks[1], (*lead, ep, d, fe), 0.02, dt),
+        "wg": normal_init(ks[2], (*lead, ep, d, fe), 0.02, dt),
+        "wo": normal_init(ks[3], (*lead, ep, fe, d), scale_out, dt),
+    }
+    if cfg.moe_num_shared:
+        fs = cfg.moe_num_shared * fe
+        p["shared"] = mlp_init(cfg, ks[4], d, fs, stacked=stacked)
+    return p
+
+
+def moe_specs(cfg, stacked: bool = False) -> Params:
+    l = (None,) if stacked else ()
+    p = {
+        "router": P(*l, None, None),
+        "wi": P(*l, "model", None, None),
+        "wg": P(*l, "model", None, None),
+        "wo": P(*l, "model", None, None),
+    }
+    if cfg.moe_num_shared:
+        p["shared"] = mlp_specs(cfg, stacked=stacked)
+    return p
+
+
+def apply_moe(cfg, p: Params, x: jax.Array, tp: int, sc=None) -> jax.Array:
+    """x: [B, S, D] -> [B, S, D]."""
+    bsz, s, d = x.shape
+    t = bsz * s
+    e = _padded_experts(cfg, tp)
+    k = cfg.moe_top_k
+    cap = int(t * k / e * cfg.moe_capacity_factor) + 1
+    cap = min(cap, t)
+    xt = x.reshape(t, d)
+
+    logits = jnp.einsum(
+        "td,de->te", xt.astype(jnp.float32), p["router"], preferred_element_type=jnp.float32
+    )
+    if e != cfg.moe_num_experts:  # mask padded experts out of routing
+        logits = jnp.where(jnp.arange(e) < cfg.moe_num_experts, logits, -1e9)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)  # [T, K]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)  # renormalize
+
+    # ---- sort-based dispatch ----
+    flat_e = idx.reshape(-1)  # [T*K]
+    order = jnp.argsort(flat_e)  # slots grouped by expert
+    sorted_e = flat_e[order]
+    # rank within expert = position - first position of that expert
+    pos = jnp.arange(t * k)
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    rank = pos - seg_start[sorted_e]
+    keep = rank < cap
+    dst = jnp.where(keep, sorted_e * cap + rank, e * cap)  # overflow -> dropped row
+    token_of_slot = order // k
+
+    xe = jnp.zeros((e * cap + 1, d), x.dtype)
+    xe = xe.at[dst].set(xt[token_of_slot], mode="drop")
+    xe = xe[: e * cap].reshape(e, cap, d)
+    if sc is not None:
+        xe = sc(xe, P("model", None, None))
+
+    # ---- per-expert gated ffn ----
+    acc = jnp.float32
+    hi = jnp.einsum("ecd,edf->ecf", xe, p["wi"], preferred_element_type=acc)
+    hg = jnp.einsum("ecd,edf->ecf", xe, p["wg"], preferred_element_type=acc)
+    h = (jax.nn.silu(hg) * hi).astype(x.dtype)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wo"], preferred_element_type=acc).astype(x.dtype)
+
+    # ---- combine: gather back and weight by gate ----
+    ye_flat = jnp.concatenate([ye.reshape(e * cap, d), jnp.zeros((1, d), x.dtype)])
+    slot_out = ye_flat[dst]  # [T*K, D] (dropped slots read zeros)
+    gate_sorted = gate.reshape(-1)[order]
+    contrib = slot_out * gate_sorted[:, None].astype(x.dtype)
+    out = jnp.zeros((t, d), jnp.float32).at[token_of_slot].add(contrib.astype(jnp.float32))
+
+    if cfg.moe_num_shared:
+        from repro.models.layers import apply_mlp
+
+        out = out + apply_mlp(cfg, p["shared"], x, sc=sc).reshape(t, d)
+    return out.astype(x.dtype).reshape(bsz, s, d)
+
+
+def aux_load_balance_loss(cfg, logits: jax.Array, idx: jax.Array) -> jax.Array:
+    """Switch-style load-balance auxiliary loss (optional training extra)."""
+    e = logits.shape[-1]
+    probs = jax.nn.softmax(logits, -1)
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(1.0) / idx.size
+    return e * (me * ce).sum()

@@ -1,0 +1,222 @@
+"""Mamba2 SSD (state-space duality, arXiv:2405.21060) in pure JAX.
+
+Chunked algorithm: within-chunk quadratic (attention-like) term + across-chunk
+state recurrence (lax.scan), giving O(S·Q) work per head instead of O(S^2).
+Used by mamba2-1.3b (full layer) and hymba-1.5b (parallel SSM branch).
+
+TP sharding: heads over "model" (d_inner split); B/C (ngroups=1) replicated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import Params, dtype_of, normal_init
+
+
+def _ssm_dims(cfg, tp: int) -> tuple[int, int, int, int]:
+    """(d_inner, heads, headdim, state) padded so heads % tp == 0."""
+    p_dim = cfg.ssm_head_dim
+    h = cfg.ssm_d_inner // p_dim
+    hp = ((h + tp - 1) // tp) * tp
+    return hp * p_dim, hp, p_dim, cfg.ssm_state
+
+
+def ssm_init(cfg, key, tp: int, stacked: int | None = None) -> Params:
+    dt_ = dtype_of(cfg)
+    d = cfg.d_model
+    di, h, p_dim, n = _ssm_dims(cfg, tp)
+    lead = () if stacked is None else (stacked,)
+    ks = jax.random.split(key, 6)
+    conv_ch = di + 2 * n
+    scale_out = 0.02 / max(1.0, (2 * cfg.num_layers) ** 0.5)
+    out_proj = normal_init(ks[2], (*lead, di, d), scale_out, dt_)
+    orig_di = cfg.ssm_d_inner
+    if di != orig_di:  # zero rows of padded heads -> exact original function
+        alive = (jnp.arange(di) < orig_di).astype(out_proj.dtype)
+        out_proj = out_proj * alive[..., :, None]
+    return {
+        # fused input projection -> [z (di), x (di), B (n), C (n), dt (h)]
+        "in_proj": normal_init(ks[0], (*lead, d, 2 * di + 2 * n + h), 0.02, dt_),
+        "conv_w": normal_init(ks[1], (*lead, cfg.ssm_conv_width, conv_ch), 0.2, jnp.float32),
+        "conv_b": jnp.zeros((*lead, conv_ch), jnp.float32),
+        "a_log": jnp.zeros((*lead, h), jnp.float32),  # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((*lead, h), jnp.float32),
+        "dt_bias": jnp.zeros((*lead, h), jnp.float32),
+        "norm": jnp.ones((*lead, di), jnp.float32),
+        "out_proj": out_proj,
+    }
+
+
+def ssm_specs(cfg, stacked: bool = False) -> Params:
+    l = (None,) if stacked else ()
+    return {
+        "in_proj": P(*l, None, "model"),
+        "conv_w": P(*l, None, "model"),
+        "conv_b": P(*l, "model"),
+        "a_log": P(*l, "model"),
+        "d_skip": P(*l, "model"),
+        "dt_bias": P(*l, "model"),
+        "norm": P(*l, "model"),
+        "out_proj": P(*l, "model", None),
+    }
+
+
+def _split_proj(cfg, tp: int, zxbcdt: jax.Array):
+    di, h, p_dim, n = _ssm_dims(cfg, tp)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over seq. xbc: [B,S,C]; w: [W,C]."""
+    width = w.shape[0]
+    xf = xbc.astype(jnp.float32)
+    pad = jnp.pad(xf, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xf)
+    for i in range(width):  # width is tiny (4): unrolled taps beat conv lowering
+        out = out + pad[:, i : i + xf.shape[1], :] * w[i]
+    return jax.nn.silu(out + b).astype(xbc.dtype)
+
+
+def ssd_chunked(
+    x: jax.Array,  # [B, S, H, P] (pre-scaled inputs)
+    dt: jax.Array,  # [B, S, H] softplus'd step sizes
+    a: jax.Array,  # [H] negative decay rates (A = -exp(a_log))
+    b_in: jax.Array,  # [B, S, N]
+    c_in: jax.Array,  # [B, S, N]
+    chunk: int,
+    init_state: jax.Array | None = None,  # [B, H, P, N]
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    bsz, s, h, p_dim = x.shape
+    n = b_in.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, f"seq {s} must divide into chunks of {chunk}"
+    nc = s // chunk
+
+    xc = x.reshape(bsz, nc, chunk, h, p_dim).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(bsz, nc, chunk, h).transpose(1, 0, 2, 3)
+    bc = b_in.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+    cc = c_in.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p_dim, n), jnp.float32)
+
+    def body(state, xs):
+        xk, dtk, bk, ck = xs  # [B,Q,H,P], [B,Q,H], [B,Q,N], [B,Q,N]
+        log_a = dtk * a  # [B,Q,H]  (negative)
+        la = jnp.cumsum(log_a, axis=1)  # inclusive cumsum
+        la_end = la[:, -1]  # [B,H]
+        xdt = (xk.astype(jnp.float32)) * dtk[..., None]
+        cbf = jnp.einsum("bqn,bkn->bqk", ck.astype(jnp.float32), bk.astype(jnp.float32))
+        # decay factor exp(la_i - la_j), causal-masked (j <= i)
+        rel = la[:, :, None, :] - la[:, None, :, :]  # [B,Q,K,H]
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        decay = jnp.where(causal[None, :, :, None], jnp.exp(rel), 0.0)
+        att = cbf[..., None] * decay  # [B,Q,K,H]
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", att, xdt)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum(
+            "bqn,bhpn,bqh->bqhp", cc_f(ck), state, jnp.exp(la)
+        )
+        # new state: decay old + sum_j exp(la_end - la_j) * xdt_j B_j^T
+        to_end = jnp.exp(la_end[:, None] - la)  # [B,Q,H]
+        s_contrib = jnp.einsum("bqh,bqn,bqhp->bhpn", to_end, cc_f(bk), xdt)
+        state_new = state * jnp.exp(la_end)[:, :, None, None] + s_contrib
+        return state_new, (y_intra + y_inter)
+
+    def cc_f(t):
+        return t.astype(jnp.float32)
+
+    from repro.models.unroll_flag import unroll_inner as _unroll
+
+    state, ys = jax.lax.scan(body, init_state, (xc, dtc, bc, cc), unroll=_unroll(nc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, p_dim)
+    return y.astype(x.dtype), state
+
+
+def apply_ssm(
+    cfg,
+    p: Params,
+    x: jax.Array,  # [B, S, D]
+    tp: int,
+    conv_state: jax.Array | None = None,  # decode: [B, W-1, C]
+    ssm_state: jax.Array | None = None,  # decode: [B, H, P, N]
+    mode: str = "train",
+) -> tuple[jax.Array, jax.Array | None, jax.Array | None]:
+    """Full SSM block. Returns (out [B,S,D], conv_state', ssm_state').
+
+    mode "train"/"prefill": full-sequence chunked SSD (states returned for
+    prefill hand-off). mode "decode": single-token recurrent update (S == 1).
+    """
+    di, h, p_dim, n = _ssm_dims(cfg, tp)
+    acc = jnp.float32
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"], preferred_element_type=acc).astype(
+        x.dtype
+    )
+    z, xbc, dt_raw = _split_proj(cfg, tp, zxbcdt)
+    a = -jnp.exp(p["a_log"])  # [H]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+
+    if mode == "decode":
+        width = cfg.ssm_conv_width
+        assert conv_state is not None and ssm_state is not None
+        hist = jnp.concatenate([conv_state, xbc.astype(jnp.float32)], axis=1)
+        conv_out = (hist * p["conv_w"][None]).sum(axis=1) + p["conv_b"]
+        xbc_act = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)  # [B,1,C]
+        new_conv_state = hist[:, 1:, :]
+        xs = xbc_act[..., :di].reshape(-1, 1, h, p_dim)
+        b_in = xbc_act[..., di : di + n]
+        c_in = xbc_act[..., di + n :]
+        dtv = dt[:, 0]  # [B,H]
+        da = jnp.exp(dtv * a)  # [B,H]
+        xdt = xs[:, 0].astype(jnp.float32) * dtv[..., None]  # [B,H,P]
+        new_state = ssm_state * da[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xdt, b_in[:, 0].astype(jnp.float32)
+        )
+        y = jnp.einsum("bn,bhpn->bhp", c_in[:, 0].astype(jnp.float32), new_state)
+        y = y + p["d_skip"][:, None] * xs[:, 0].astype(jnp.float32)
+        y = y.reshape(-1, 1, di)
+    else:
+        xbc_act = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+        xs = xbc_act[..., :di].reshape(x.shape[0], -1, h, p_dim)
+        b_in = xbc_act[..., di : di + n]
+        c_in = xbc_act[..., di + n :]
+        y4, final_state = ssd_chunked(xs, dt, a, b_in, c_in, cfg.ssm_chunk)
+        y = y4.reshape(x.shape[0], -1, di).astype(jnp.float32)
+        y = y + (p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)).reshape(
+            x.shape[0], -1, di
+        )
+        new_state = final_state
+        width = cfg.ssm_conv_width
+        tail = xbc.astype(jnp.float32)[:, -(width - 1) :, :]
+        new_conv_state = tail
+
+    # gated RMS norm: norm(y * silu(z))
+    g = y * jax.nn.silu(z.astype(jnp.float32))
+    var = (g * g).mean(-1, keepdims=True)
+    g = g * jax.lax.rsqrt(var + 1e-6) * p["norm"]
+    out = jnp.einsum(
+        "bsk,kd->bsd", g.astype(x.dtype), p["out_proj"], preferred_element_type=acc
+    ).astype(x.dtype)
+    return out, new_conv_state, new_state
+
+
+def ssm_cache_init(cfg, batch: int, tp: int, layers: int) -> Params:
+    di, h, p_dim, n = _ssm_dims(cfg, tp)
+    conv_ch = di + 2 * n
+    return {
+        "conv": jnp.zeros((layers, batch, cfg.ssm_conv_width - 1, conv_ch), jnp.float32),
+        "ssm": jnp.zeros((layers, batch, h, p_dim, n), jnp.float32),
+    }
+
+
+def ssm_cache_specs(batch_axes) -> Params:
+    return {
+        "conv": P(None, batch_axes, None, "model"),
+        "ssm": P(None, batch_axes, "model", None, None),
+    }

@@ -1,0 +1,28 @@
+"""Scan-unroll switch for cost-analysis lowerings.
+
+XLA's HloCostAnalysis counts while-loop bodies once, so the dry-run's *cost*
+lowering unrolls every structural scan (layer stacks, SSD chunk scans, chunked
+attention) to get true flops/bytes/collective counts. The *memory* lowering keeps
+scans rolled — that is the production program.
+"""
+_SCAN_UNROLL = False
+
+# Inner (sequence-chunk) scans nested inside the layer scan explode compile time
+# when fully unrolled under autodiff+remat (layer_count x chunk_count bodies).
+# Cap them: the flop undercount is (1 - cap/n_chunks) x (SSD share of flops),
+# single-digit percent for the hybrid/SSM archs; the exact jaxpr counter
+# (launch/jaxpr_flops.py) reports the true number alongside.
+INNER_UNROLL_CAP = 2
+
+
+def set_scan_unroll(value: bool) -> None:
+    global _SCAN_UNROLL
+    _SCAN_UNROLL = value
+
+
+def unroll(length: int) -> int:
+    return max(1, length) if _SCAN_UNROLL else 1
+
+
+def unroll_inner(length: int) -> int:
+    return max(1, min(length, INNER_UNROLL_CAP)) if _SCAN_UNROLL else 1

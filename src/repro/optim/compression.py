@@ -1,0 +1,79 @@
+"""Gradient compression for cross-pod all-reduce (distributed-optimization trick).
+
+Two schemes, both with error feedback so compression error accumulates locally
+instead of biasing the trajectory:
+
+  * int8 stochastic-rounding quantization (8x traffic reduction)
+  * top-k magnitude sparsification (k as a fraction; indices+values traffic)
+
+Applied inside the train step *before* the gradient mean over the "pod" axis when
+enabled — inside shard_map the all-reduce then moves int8/sparse payloads. On the
+CPU dry-run the effect is visible as reduced all-reduce operand bytes in the HLO.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jax.Array, key: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor scale + int8 payload with stochastic rounding."""
+    amax = jnp.max(jnp.abs(g)) + 1e-12
+    scale = amax / 127.0
+    scaled = g.astype(jnp.float32) / scale
+    noise = jax.random.uniform(key, g.shape, jnp.float32, -0.5, 0.5)
+    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads_int8(
+    grads: Any, error: Any, key: jax.Array
+) -> tuple[Any, Any, Any]:
+    """Error-feedback int8: returns (quantized tree, scales tree, new error tree)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    err_leaves = jax.tree.leaves(error)
+    keys = jax.random.split(key, len(leaves))
+    qs, scales, errs = [], [], []
+    for g, e, k in zip(leaves, err_leaves, keys):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected, k)
+        deq = dequantize_int8(q, s)
+        qs.append(q)
+        scales.append(s)
+        errs.append(corrected - deq)
+    return (
+        treedef.unflatten(qs),
+        treedef.unflatten(scales),
+        treedef.unflatten(errs),
+    )
+
+
+def decompress_grads_int8(qs: Any, scales: Any) -> Any:
+    return jax.tree.map(dequantize_int8, qs, scales)
+
+
+def error_init(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def topk_sparsify(g: jax.Array, frac: float, error: jax.Array) -> tuple:
+    """Error-feedback top-|g| sparsification. Returns (values, idx, new_error)."""
+    flat = g.astype(jnp.float32).reshape(-1) + error.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    chosen = flat[idx]
+    dense = jnp.zeros_like(flat).at[idx].set(chosen)
+    return chosen, idx, (flat - dense).reshape(g.shape)
+
+
+def topk_densify(vals: jax.Array, idx: jax.Array, shape) -> jax.Array:
+    size = 1
+    for s in shape:
+        size *= s
+    return jnp.zeros((size,), jnp.float32).at[idx].set(vals).reshape(shape)

@@ -1,0 +1,1 @@
+from repro.serving.steps import build_decode_step, build_prefill_step, greedy_sample

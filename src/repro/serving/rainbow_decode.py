@@ -1,0 +1,195 @@
+"""Rainbow-managed decode: paged KV with two-tier translation + hot-block stats.
+
+Read modes:
+  * full   — attend over every block through the translated (single-gather)
+             pool read; numerically identical to flat-cache decode.
+  * sparse — attend over hot-pool blocks + the trailing window only (stage-1
+             screened). This is where tiering pays on real hardware: cold
+             blocks stay in the capacity tier (host memory) untouched. The
+             approximation (H2O/Quest-style) is opt-in; any block whose mass
+             grows gets promoted and rejoins the read set.
+
+Each decode step records per-block attention mass (the access stream of the
+paper's memory controller); every `interval_steps`, end_interval_promote() runs
+two-stage classification + utility admission and copies hot blocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.remap import translate
+from repro.memory.kvcache import (
+    PagedConfig,
+    RainbowKV,
+    append_token,
+    append_token_q8,
+    dequantize_kv,
+    end_interval_promote,
+    observe_block_mass,
+    promote_scales,
+)
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import model as M
+
+
+def _attend_with_mass(q, k, v, valid, block_size, nblk):
+    """decode_attend that also returns per-block softmax mass [B, nblk].
+
+    valid: bool[S] or bool[B, S] mask of readable positions.
+    """
+    b, smax, kvs, hd = k.shape
+    hp = q.shape[2]
+    ke = attn._expand_kv(k, hp)
+    ve = attn._expand_kv(v, hp)
+    s = jnp.einsum("bqhk,bshk->bhqs", q, ke, preferred_element_type=jnp.float32)
+    s = s / np.sqrt(hd)
+    if valid.ndim == 1:
+        valid = valid[None]
+    s = jnp.where(valid[:, None, None, :], s, attn.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhqs,bshk->bqhk", p.astype(q.dtype), ve, preferred_element_type=jnp.float32
+    ).astype(q.dtype)
+    mass = p[:, :, 0, :].sum(axis=1)  # [B, S] summed over heads
+    full = nblk * block_size
+    blk_mass = mass[:, :full].reshape(b, nblk, block_size).sum(-1)
+    return out, blk_mass
+
+
+def rainbow_decode_step(
+    cfg,
+    pcfg: PagedConfig,
+    params: Any,
+    tokens: jax.Array,  # [B, 1]
+    kv: RainbowKV,
+    tp: int = 1,
+    sc=None,
+    mode: str = "full",
+    scales: dict | None = None,  # int8 mode (pcfg.quantize): scale side pytree
+):
+    """One decode step for a dense-family LM over the Rainbow paged cache."""
+    assert cfg.family in ("dense", "vlm"), "rainbow decode targets dense-family archs"
+    b = tokens.shape[0]
+    cur = kv.length
+    x = L.embed_lookup(cfg, params["embed"], tokens)
+    pos = jnp.full((b, 1), cur, jnp.int32)
+    nblk = pcfg.blocks_per_seq
+
+    seg = M.segments(cfg)[0]
+    seg_params = params["segments"][seg.name]
+
+    # Translation is layer-invariant: compute the virtual pool indices once.
+    blocks = jnp.arange(nblk)
+    sp = jnp.arange(b)[:, None].repeat(nblk, 1)
+    resident, slot = translate(kv.remap, sp, blocks[None, :].repeat(b, 0))
+    home = (sp * nblk + blocks[None, :]).astype(jnp.int32)
+    n_cap = b * nblk
+    vidx = jnp.where(resident, n_cap + slot, home)  # [B, nblk]
+
+    if mode == "sparse":
+        # Read set = trailing-window home blocks ++ resident (hot) blocks.
+        nwin = 8
+        cur_blk = cur // pcfg.block_size
+        win = jnp.clip((cur_blk - jnp.arange(nwin))[None, :].repeat(b, 0), 0, nblk - 1)
+        win_idx = jnp.take_along_axis(vidx, win, axis=1)
+        hot_rank = jnp.argsort(~resident, axis=1)[:, : pcfg.hot_slots // max(b, 1)]
+        hot_sel = jnp.take_along_axis(vidx, hot_rank, axis=1)
+        hot_ok = jnp.take_along_axis(resident, hot_rank, axis=1)
+        read_idx = jnp.concatenate([win_idx, jnp.where(hot_ok, hot_sel, 0)], axis=1)
+        read_valid = jnp.concatenate([jnp.ones_like(win_idx, bool), hot_ok], axis=1)
+    else:
+        read_idx = vidx
+        read_valid = None
+
+    def body(carry, xs):
+        h = carry
+        if pcfg.quantize:
+            pl, cap_k_l, cap_v_l, hot_k_l, hot_v_l, csk, csv, hsk, hsv = xs
+        else:
+            pl, cap_k_l, cap_v_l, hot_k_l, hot_v_l = xs
+        hn = L.apply_norm(cfg, pl["ln1"], h)
+        q, k_new, v_new = attn.qkv_project(cfg, pl["attn"], hn, pos, use_rope=True)
+
+        pool_k = jnp.concatenate([cap_k_l, hot_k_l], axis=0)
+        pool_v = jnp.concatenate([cap_v_l, hot_v_l], axis=0)
+        kvs_, hd = pool_k.shape[-2], pool_k.shape[-1]
+        if pcfg.quantize:
+            sk_pool = jnp.concatenate([csk, hsk], axis=0)
+            sv_pool = jnp.concatenate([csv, hsv], axis=0)
+            k_r = dequantize_kv(pool_k[read_idx], sk_pool[read_idx], x.dtype)
+            v_r = dequantize_kv(pool_v[read_idx], sv_pool[read_idx], x.dtype)
+            k_r = k_r.reshape(b, -1, kvs_, hd)
+            v_r = v_r.reshape(b, -1, kvs_, hd)
+        else:
+            k_r = pool_k[read_idx].reshape(b, -1, kvs_, hd)
+            v_r = pool_v[read_idx].reshape(b, -1, kvs_, hd)
+        k_r = jnp.concatenate([k_r, k_new], axis=1)  # fresh token attends itself
+        v_r = jnp.concatenate([v_r, v_new], axis=1)
+
+        smax = k_r.shape[1]
+        if mode == "sparse":
+            token_ok = jnp.repeat(read_valid, pcfg.block_size, axis=1)
+            valid = jnp.concatenate(
+                [token_ok, jnp.ones((b, 1), bool)], axis=1
+            )  # fresh token always readable
+            o, mass = _attend_with_mass(
+                q, k_r, v_r, valid, pcfg.block_size, read_idx.shape[1]
+            )
+            blk_mass = jnp.zeros((b, nblk), jnp.float32)
+        else:
+            pos_ids = jnp.arange(smax)
+            valid = (pos_ids < cur) | (pos_ids == smax - 1)  # history + fresh
+            o, blk_mass = _attend_with_mass(
+                q, k_r, v_r, valid, pcfg.block_size, nblk
+            )
+
+        h = h + attn.attn_output(pl["attn"], o)
+        h2 = L.apply_norm(cfg, pl["ln2"], h)
+        h = h + L.apply_mlp(cfg, pl["mlp"], h2, sc=sc)
+        return h, (k_new[:, 0], v_new[:, 0], blk_mass)
+
+    if pcfg.quantize:
+        xs = (seg_params, kv.cap_k, kv.cap_v, kv.hot_k, kv.hot_v,
+              scales["cap_k"], scales["cap_v"], scales["hot_k"], scales["hot_v"])
+    else:
+        xs = (seg_params, kv.cap_k, kv.cap_v, kv.hot_k, kv.hot_v)
+    h, (k_all, v_all, mass_all) = jax.lax.scan(body, x, xs)
+
+    if pcfg.quantize:
+        kv, scales = append_token_q8(kv, pcfg, scales, k_all, v_all)
+    else:
+        kv = append_token(kv, pcfg, None, k_all, v_all)
+    kv = observe_block_mass(kv, pcfg, mass_all.sum(axis=0))
+    kv = dataclasses.replace(kv, length=kv.length + 1)
+
+    if pcfg.quantize:
+        def do_promote(args):
+            kv_, sc_ = args
+            new, rep = end_interval_promote(kv_, pcfg)
+            sc_ = promote_scales(sc_, pcfg, rep["plan"], rep["cand_sp"], rep["cand_pg"])
+            return new, sc_
+
+        kv, scales = jax.lax.cond(
+            kv.step_in_interval >= pcfg.interval_steps, do_promote,
+            lambda a: a, (kv, scales),
+        )
+    else:
+        def do_promote(kv_):
+            new, _ = end_interval_promote(kv_, pcfg)
+            return new
+
+        kv = jax.lax.cond(
+            kv.step_in_interval >= pcfg.interval_steps, do_promote, lambda s: s, kv
+        )
+
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    logits = L.lm_logits(cfg, params["embed"], h)
+    if pcfg.quantize:
+        return logits, kv, scales
+    return logits, kv

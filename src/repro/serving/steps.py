@@ -1,0 +1,58 @@
+"""Serving step builders: prefill and single-token decode (flat KV cache).
+
+The Rainbow-paged decode path lives in repro.serving.rainbow_decode; this module
+is the baseline (paper's "without technique" serving analogue).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.axes import BATCH_AXES
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+def decode_batch_specs(batch_replicated: bool = False) -> dict[str, Any]:
+    dp = None if batch_replicated else BATCH_AXES
+    return {"tokens": P(dp, None)}
+
+
+def prefill_batch_specs(cfg: ModelConfig, batch_replicated: bool = False):
+    dp = None if batch_replicated else BATCH_AXES
+    specs = {"tokens": P(dp, None)}
+    if cfg.family == "vlm":
+        specs["vision_embeds"] = P(dp, None, None)
+    if cfg.is_encoder_decoder:
+        specs["frames"] = P(dp, None, None)
+    return specs
+
+
+def build_prefill_step(
+    cfg: ModelConfig, tp: int, max_len: int, sc=None, attn_impl: str = "dense"
+) -> Callable:
+    """(params, batch) -> (logits [B,1,V], cache). Cache is created inside."""
+
+    def step(params, batch):
+        bsz = batch["tokens"].shape[0]
+        cache = M.init_cache(cfg, bsz, max_len, tp=tp)
+        return M.prefill(cfg, params, batch, cache, tp=tp, sc=sc, attn_impl=attn_impl)
+
+    return step
+
+
+def build_decode_step(cfg: ModelConfig, tp: int, sc=None) -> Callable:
+    """(params, cache, tokens [B,1]) -> (logits [B,1,V], cache')."""
+
+    def step(params, cache, tokens):
+        logits, cache = M.decode_step(cfg, params, tokens, cache, tp=tp, sc=sc)
+        return logits, cache
+
+    return step
+
+
+def greedy_sample(logits: jax.Array, vocab_size: int) -> jax.Array:
+    return jnp.argmax(logits[..., :vocab_size], axis=-1).astype(jnp.int32)

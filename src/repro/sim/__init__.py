@@ -1,0 +1,1 @@
+from repro.sim import config, energy, policies, runner, tlbsim, trace

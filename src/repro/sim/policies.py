@@ -1,0 +1,342 @@
+"""The five memory-management policies of §IV-A, driven interval by interval.
+
+Each policy owns: residency state (which 4KB pages / superpages are DRAM-cached),
+a migration routine run at interval boundaries, and the translation kind used by
+the per-access scan (tlbsim). Rainbow reuses the core library (two-stage counting,
+utility admission, remap/bitmap) — Layer A and Layer B share that code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import counting, migration
+from repro.core import rainbow as rb
+from repro.core.migration import TimingParams, make_timing
+from repro.core.tlb import tlb_invalidate
+from repro.sim import tlbsim
+from repro.sim.config import PAGES_PER_SP, MachineConfig
+from repro.sim.trace import Trace
+
+
+def machine_timing(mc: MachineConfig) -> TimingParams:
+    """Admission-test timing: T_mig amortized over expected residency."""
+    a = max(mc.t_mig_amortize, 1.0)
+    return make_timing(
+        t_nr=mc.t_nr, t_nw=mc.t_nw, t_dr=mc.t_dr, t_dw=mc.t_dw,
+        t_mig=mc.mig_page_cost / a, t_writeback=mc.writeback_page_cost / a,
+    )
+
+
+@dataclasses.dataclass
+class IntervalResult:
+    counters: tlbsim.SimCounters
+    migrations: int = 0
+    evictions: int = 0
+    dirty_evictions: int = 0
+    shootdowns: int = 0
+    mig_bytes: float = 0.0
+    mig_cycles: float = 0.0
+    shootdown_cycles: float = 0.0
+    clflush_cycles: float = 0.0
+
+
+class Policy:
+    name = "base"
+    kind = "flat4k"
+
+    def __init__(self, mc: MachineConfig, trace0: Trace, seed: int = 0):
+        self.mc = mc
+        self.sim = tlbsim.init_state(mc)
+        self.timing = machine_timing(mc)
+        self.num_sp = trace0.num_superpages
+        self.fp_pages = trace0.footprint_pages
+
+    def residency(self, trace: Trace) -> jax.Array:
+        raise NotImplementedError
+
+    def migrate(self, trace: Trace, in_dram: np.ndarray) -> IntervalResult:
+        raise NotImplementedError
+
+    def run_interval(self, trace: Trace) -> IntervalResult:
+        in_dram = self.residency(trace)
+        before = self.sim.counters
+        self.sim = tlbsim.run_interval(
+            self.kind,
+            self.mc,
+            self.sim,
+            jnp.asarray(trace.vpn.astype(np.int32)),
+            jnp.asarray(trace.sp),
+            jnp.asarray(in_dram),
+            jnp.asarray(trace.is_write),
+        )
+        delta = jax.tree.map(lambda a, b: a - b, self.sim.counters, before)
+        res = self.migrate(trace, np.asarray(in_dram))
+        res.counters = delta
+        return res
+
+    def _invalidate_4k(self, vpns: np.ndarray) -> None:
+        from repro.core.tlb import SplitTLB
+
+        tlb4 = self.sim.tlb4
+        for v in vpns[:256]:
+            tlb4 = SplitTLB(
+                l1=tlb_invalidate(tlb4.l1, jnp.asarray(v)),
+                l2=tlb_invalidate(tlb4.l2, jnp.asarray(v)),
+            )
+        self.sim = self.sim._replace(tlb4=tlb4)
+
+
+# ---------------------------------------------------------------------------
+
+
+class FlatStatic(Policy):
+    """4 KB pages, static placement by capacity ratio (1:8), no migration."""
+
+    name = "flat-static"
+    kind = "flat4k"
+
+    def residency(self, trace: Trace) -> np.ndarray:
+        ratio = self.mc.dram_bytes / (self.mc.dram_bytes + self.mc.nvm_bytes)
+        # deterministic hash placement
+        return ((trace.vpn * 2654435761) % 997) < int(997 * ratio)
+
+    def migrate(self, trace: Trace, in_dram) -> IntervalResult:
+        return IntervalResult(counters=tlbsim.zero_counters())
+
+
+class DramOnly(Policy):
+    """32 GB DRAM, 2 MB superpages, no migration (upper bound)."""
+
+    name = "dram-only"
+    kind = "sp2m"
+
+    def residency(self, trace: Trace) -> np.ndarray:
+        return np.ones_like(trace.sp, bool)
+
+    def migrate(self, trace: Trace, in_dram) -> IntervalResult:
+        return IntervalResult(counters=tlbsim.zero_counters())
+
+
+class Hscc4K(Policy):
+    """HSCC: flat space, utility migration at 4 KB granularity, 4 KB TLBs."""
+
+    name = "hscc-4kb-mig"
+    kind = "flat4k"
+
+    def __init__(self, mc, trace0, seed=0):
+        super().__init__(mc, trace0, seed)
+        self.resident = np.zeros(self.fp_pages, bool)  # DRAM residency per page
+        self.dirty = np.zeros(self.fp_pages, bool)
+        self.slots_used = 0
+        self.max_slots = mc.dram_pages
+
+    def residency(self, trace: Trace) -> np.ndarray:
+        return self.resident[np.minimum(trace.vpn, self.fp_pages - 1)]
+
+    def migrate(self, trace: Trace, in_dram) -> IntervalResult:
+        mc = self.mc
+        vpn = np.minimum(trace.vpn, self.fp_pages - 1)
+        reads = np.bincount(vpn[~trace.is_write], minlength=self.fp_pages)
+        writes = np.bincount(vpn[trace.is_write], minlength=self.fp_pages)
+        self.dirty |= self.resident & (writes > 0)
+        benefit = (
+            (mc.t_nr - mc.t_dr) * reads
+            + (mc.t_nw - mc.t_dw) * writes
+            - mc.mig_page_cost
+        )
+        benefit[self.resident] = -np.inf  # already cached
+        cand = np.argsort(-benefit)[:512]
+        cand = cand[benefit[cand] > mc.mig_threshold]
+
+        migrations = evictions = dirty_ev = 0
+        free = self.max_slots - self.slots_used
+        admit_free = cand[: max(free, 0)]
+        self.resident[admit_free] = True
+        self.slots_used += len(admit_free)
+        migrations += len(admit_free)
+
+        # evict coldest resident pages for the remainder (clean first)
+        rest = cand[max(free, 0):]
+        if len(rest):
+            res_idx = np.flatnonzero(self.resident)
+            cold_order = res_idx[np.argsort(reads[res_idx] + writes[res_idx])]
+            k = min(len(rest), len(cold_order))
+            victims = cold_order[:k]
+            gain_in = benefit[rest[:k]]
+            gain_out = (
+                (mc.t_nr - mc.t_dr) * reads[victims]
+                + (mc.t_nw - mc.t_dw) * writes[victims]
+            )
+            wb = np.where(self.dirty[victims], mc.writeback_page_cost, 0.0)
+            ok = gain_in - gain_out - mc.mig_page_cost - wb > mc.mig_threshold
+            victims, incoming = victims[ok], rest[:k][ok]
+            self.resident[victims] = False
+            self.resident[incoming] = True
+            dirty_ev = int(self.dirty[victims].sum())
+            self.dirty[victims] = False
+            evictions = len(victims)
+            migrations += len(incoming)
+
+        # every migration / eviction remaps a page -> shootdown + clflush
+        shootdowns = migrations + evictions
+        self._invalidate_4k(cand[:64])
+        pages_moved = migrations + evictions
+        return IntervalResult(
+            counters=tlbsim.zero_counters(),
+            migrations=migrations,
+            evictions=evictions,
+            dirty_evictions=dirty_ev,
+            shootdowns=shootdowns,
+            mig_bytes=pages_moved * 4096.0,
+            mig_cycles=pages_moved * mc.mig_page_cost
+            + dirty_ev * mc.writeback_page_cost,
+            shootdown_cycles=shootdowns * mc.shootdown_cost,
+            clflush_cycles=pages_moved * (4096 / mc.line_bytes) * mc.clflush_per_line,
+        )
+
+
+class Hscc2M(Policy):
+    """HSCC modified for 2 MB superpage migration (costly; paper's foil)."""
+
+    name = "hscc-2mb-mig"
+    kind = "sp2m"
+
+    def __init__(self, mc, trace0, seed=0):
+        super().__init__(mc, trace0, seed)
+        self.resident = np.zeros(self.num_sp, bool)
+        self.dirty = np.zeros(self.num_sp, bool)
+        self.max_slots = mc.dram_superpages
+
+    def residency(self, trace: Trace) -> np.ndarray:
+        return self.resident[trace.sp]
+
+    def migrate(self, trace: Trace, in_dram) -> IntervalResult:
+        mc = self.mc
+        reads = np.bincount(trace.sp[~trace.is_write], minlength=self.num_sp)
+        writes = np.bincount(trace.sp[trace.is_write], minlength=self.num_sp)
+        self.dirty |= self.resident & (writes > 0)
+        sp_mig_cost = mc.mig_page_cost * PAGES_PER_SP
+        benefit = (
+            (mc.t_nr - mc.t_dr) * reads + (mc.t_nw - mc.t_dw) * writes - sp_mig_cost
+        )
+        benefit[self.resident] = -np.inf
+        cand = np.argsort(-benefit)[:64]
+        cand = cand[benefit[cand] > mc.mig_threshold]
+
+        migrations = evictions = dirty_ev = 0
+        used = int(self.resident.sum())
+        free = self.max_slots - used
+        admit = cand[: max(free, 0)]
+        self.resident[admit] = True
+        migrations += len(admit)
+        rest = cand[max(free, 0):]
+        if len(rest):
+            res_idx = np.flatnonzero(self.resident)
+            cold = res_idx[np.argsort(reads[res_idx] + writes[res_idx])]
+            k = min(len(rest), len(cold))
+            victims = cold[:k]
+            gain_in = benefit[rest[:k]]
+            gain_out = (mc.t_nr - mc.t_dr) * reads[victims] + (
+                mc.t_nw - mc.t_dw
+            ) * writes[victims]
+            wb = np.where(self.dirty[victims], mc.writeback_page_cost * PAGES_PER_SP, 0)
+            ok = gain_in - gain_out - sp_mig_cost - wb > mc.mig_threshold
+            victims, incoming = victims[ok], rest[:k][ok]
+            self.resident[victims] = False
+            self.resident[incoming] = True
+            dirty_ev = int(self.dirty[victims].sum())
+            self.dirty[victims] = False
+            evictions = len(victims)
+            migrations += len(incoming)
+
+        shootdowns = migrations + evictions
+        sp_moved = migrations + evictions
+        return IntervalResult(
+            counters=tlbsim.zero_counters(),
+            migrations=migrations,
+            evictions=evictions,
+            dirty_evictions=dirty_ev,
+            shootdowns=shootdowns,
+            mig_bytes=sp_moved * float(PAGES_PER_SP * 4096),
+            mig_cycles=sp_moved * sp_mig_cost
+            + dirty_ev * mc.writeback_page_cost * PAGES_PER_SP,
+            shootdown_cycles=shootdowns * mc.shootdown_cost,
+            clflush_cycles=sp_moved
+            * (PAGES_PER_SP * 4096 / mc.line_bytes)
+            * mc.clflush_per_line,
+        )
+
+
+class Rainbow(Policy):
+    """The paper's system, driven by the shared core library."""
+
+    name = "rainbow"
+    kind = "rainbow"
+
+    def __init__(self, mc, trace0, seed=0):
+        super().__init__(mc, trace0, seed)
+        self.cfg = rb.RainbowConfig(
+            num_superpages=self.num_sp,
+            pages_per_sp=PAGES_PER_SP,
+            top_n=mc.top_n,
+            dram_slots=mc.dram_pages,
+            write_weight=mc.write_weight,
+            max_migrations_per_interval=512,
+        )
+        self.state = rb.rainbow_init(self.cfg, threshold=mc.mig_threshold)
+
+    def residency(self, trace: Trace) -> np.ndarray:
+        in_dram, _ = rb.translate_accesses(
+            self.state, jnp.asarray(trace.sp), jnp.asarray(trace.page)
+        )
+        return np.asarray(in_dram)
+
+    def migrate(self, trace: Trace, in_dram) -> IntervalResult:
+        mc = self.mc
+        self.state = rb.observe(
+            self.cfg,
+            self.state,
+            jnp.asarray(trace.sp),
+            jnp.asarray(trace.page),
+            jnp.asarray(trace.is_write),
+            self.state.interval,
+        )
+        self.state, rep = rb.end_interval(self.cfg, self.state, self.timing)
+        migrations = int(rep.n_migrated)
+        evictions = int(rep.n_evicted)
+        dirty_ev = int(rep.n_dirty_evicted)
+        # NVM->DRAM migration needs NO shootdown (superpage mapping unchanged);
+        # only DRAM->NVM writeback shoots down the 4KB entries (paper §III-F).
+        shootdowns = evictions
+        ev = np.asarray(rep.plan.evict_sp)
+        evp = np.asarray(rep.plan.evict_page)
+        evicted_vpn = (ev[ev >= 0].astype(np.int64) * PAGES_PER_SP + evp[ev >= 0])
+        self._invalidate_4k(evicted_vpn.astype(np.int32))
+        pages_moved = migrations + evictions
+        # clean evictions write back only the 8-byte remap pointer (§III-E)
+        return IntervalResult(
+            counters=tlbsim.zero_counters(),
+            migrations=migrations,
+            evictions=evictions,
+            dirty_evictions=dirty_ev,
+            shootdowns=shootdowns,
+            mig_bytes=migrations * 4096.0 + dirty_ev * 4096.0 + (evictions - dirty_ev) * 8.0,
+            mig_cycles=migrations * mc.mig_page_cost
+            + dirty_ev * mc.writeback_page_cost,
+            shootdown_cycles=shootdowns * mc.shootdown_cost,
+            clflush_cycles=pages_moved * (4096 / mc.line_bytes) * mc.clflush_per_line,
+        )
+
+
+POLICY_CLASSES = {
+    "flat-static": FlatStatic,
+    "hscc-4kb-mig": Hscc4K,
+    "hscc-2mb-mig": Hscc2M,
+    "rainbow": Rainbow,
+    "dram-only": DramOnly,
+}

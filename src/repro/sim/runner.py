@@ -1,0 +1,141 @@
+"""Layer-A experiment runner: simulate (app x policy) over N intervals, aggregate
+the paper's metrics (MPKI, TLB-service cycles, IPC, migration traffic, energy,
+translation breakdown)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.sim import trace as trace_mod
+from repro.sim.config import APPS, MIXES, CPU_GHZ, MachineConfig
+from repro.sim.energy import energy_joules
+from repro.sim.policies import POLICY_CLASSES
+
+BASE_CPI = 0.6  # out-of-order core CPI on non-memory work
+
+
+@dataclasses.dataclass
+class SimMetrics:
+    app: str
+    policy: str
+    instructions: float
+    total_cycles: float
+    ipc: float
+    mpki: float
+    tlb_service_cycles: float
+    tlb_service_frac: float
+    breakdown: dict[str, float]
+    migrations: int
+    evictions: int
+    shootdowns: int
+    mig_bytes: float
+    footprint_bytes: float
+    traffic_ratio: float
+    energy: dict[str, float]
+
+    def row(self) -> dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d.update(d.pop("breakdown"))
+        d.update({f"energy_{k}": v for k, v in d.pop("energy").items()})
+        return d
+
+
+def simulate(
+    app: str,
+    policy: str,
+    mc: MachineConfig | None = None,
+    intervals: int = 5,
+    accesses: int | None = None,
+    seed: int = 7,
+) -> SimMetrics:
+    mc = mc or MachineConfig()
+    trace0 = trace_mod.generate(app, seed, 0, accesses)
+    pol = POLICY_CLASSES[policy](mc, trace0, seed)
+
+    totals = {
+        "migrations": 0, "evictions": 0, "dirty": 0, "shootdowns": 0,
+        "mig_bytes": 0.0, "mig_cycles": 0.0, "shootdown_cycles": 0.0,
+        "clflush_cycles": 0.0, "accesses": 0,
+    }
+    tr = trace0
+    for i in range(intervals):
+        if i > 0:
+            tr = trace_mod.generate(app, seed, i, accesses)
+        res = pol.run_interval(tr)
+        totals["migrations"] += res.migrations
+        totals["evictions"] += res.evictions
+        totals["dirty"] += res.dirty_evictions
+        totals["shootdowns"] += res.shootdowns
+        totals["mig_bytes"] += res.mig_bytes
+        totals["mig_cycles"] += res.mig_cycles
+        totals["shootdown_cycles"] += res.shootdown_cycles
+        totals["clflush_cycles"] += res.clflush_cycles
+        totals["accesses"] += tr.sp.shape[0]
+
+    c = pol.sim.counters
+    f = lambda x: float(np.asarray(x))
+    cycles_trans = (
+        f(c.cycles_tlb) + f(c.cycles_walk) + f(c.cycles_bitmap) + f(c.cycles_remap)
+    )
+    instructions = totals["accesses"] * tr.inst_per_access
+    total_cycles = (
+        instructions * BASE_CPI
+        + cycles_trans
+        + f(c.cycles_mem)
+        + totals["mig_cycles"]
+        + totals["shootdown_cycles"]
+        + totals["clflush_cycles"]
+    )
+    # the TLB miss count that matters for MPKI: walks actually taken
+    if policy in ("flat-static", "hscc-4kb-mig"):
+        tlb_misses = f(c.miss4_l2)
+    elif policy in ("hscc-2mb-mig", "dram-only"):
+        tlb_misses = f(c.miss2m_l2)
+    else:  # rainbow: walks happen only when the superpage TLB misses
+        tlb_misses = f(c.miss2m_l2)
+
+    dram_cap = 8.0 if policy == "dram-only" else 1.0
+    energy = energy_joules(
+        mc,
+        f(c.dram_reads), f(c.dram_writes), f(c.nvm_reads), f(c.nvm_writes),
+        totals["mig_bytes"], total_cycles, dram_capacity_factor=dram_cap,
+    )
+
+    fp_bytes = tr.footprint_pages * 4096.0
+    return SimMetrics(
+        app=app,
+        policy=policy,
+        instructions=instructions,
+        total_cycles=total_cycles,
+        ipc=instructions / total_cycles,
+        mpki=tlb_misses / (instructions / 1000.0),
+        tlb_service_cycles=cycles_trans,
+        tlb_service_frac=cycles_trans / total_cycles,
+        breakdown={
+            "cycles_tlb": f(c.cycles_tlb),
+            "cycles_walk": f(c.cycles_walk),
+            "cycles_bitmap": f(c.cycles_bitmap),
+            "cycles_remap": f(c.cycles_remap),
+            "cycles_mem": f(c.cycles_mem),
+            "cycles_mig": totals["mig_cycles"],
+            "cycles_shootdown": totals["shootdown_cycles"],
+            "cycles_clflush": totals["clflush_cycles"],
+            "bmc_misses": f(c.bmc_miss),
+        },
+        migrations=totals["migrations"],
+        evictions=totals["evictions"],
+        shootdowns=totals["shootdowns"],
+        mig_bytes=totals["mig_bytes"],
+        footprint_bytes=fp_bytes,
+        traffic_ratio=totals["mig_bytes"] / fp_bytes,
+        energy=energy,
+    )
+
+
+def workloads(include_mixes: bool = True) -> list[str]:
+    w = list(APPS)
+    if include_mixes:
+        w += list(MIXES)
+    return w

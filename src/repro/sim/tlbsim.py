@@ -1,0 +1,172 @@
+"""Per-access translation+memory simulation (the sequential core of Layer A).
+
+One lax.scan over the interval's accesses carries the TLB/bitmap-cache LRU state
+and accumulates cycle/miss counters. Residency (which pages are DRAM-cached) is
+fixed within an interval — migrations happen at interval boundaries (the paper's
+history-based policy) — so residency arrives as a precomputed per-access vector.
+
+Covers all five policies via static TranslationKind:
+  flat4k  : single 4KB TLB, 4-ref PTW          (Flat-static, HSCC-4KB-mig)
+  sp2m    : single 2MB TLB, 3-ref PTW          (HSCC-2MB-mig, DRAM-only)
+  rainbow : split TLBs + bitmap cache + remap  (Fig. 6 four cases)
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitmap import BitmapCache, bitmap_cache_init, bitmap_cache_lookup
+from repro.core.tlb import SplitTLB, split_tlb_init, split_tlb_lookup
+from repro.sim.config import MachineConfig
+
+
+class SimCounters(NamedTuple):
+    cycles_tlb: jax.Array
+    cycles_walk: jax.Array
+    cycles_bitmap: jax.Array
+    cycles_remap: jax.Array
+    cycles_mem: jax.Array
+    miss4_l1: jax.Array
+    miss4_l2: jax.Array
+    miss2m_l1: jax.Array
+    miss2m_l2: jax.Array
+    bmc_miss: jax.Array
+    dram_reads: jax.Array
+    dram_writes: jax.Array
+    nvm_reads: jax.Array
+    nvm_writes: jax.Array
+
+
+def zero_counters() -> SimCounters:
+    z = jnp.zeros((), jnp.float32)
+    return SimCounters(*([z] * 14))
+
+
+class SimState(NamedTuple):
+    tlb4: SplitTLB
+    tlb2m: SplitTLB
+    bmc: BitmapCache
+    t: jax.Array
+    counters: SimCounters
+
+
+def init_state(mc: MachineConfig) -> SimState:
+    mk = lambda: split_tlb_init(
+        mc.l1_tlb_entries, mc.l1_tlb_ways, mc.l2_tlb_entries, mc.l2_tlb_ways
+    )
+    return SimState(
+        tlb4=mk(),
+        tlb2m=mk(),
+        bmc=bitmap_cache_init(mc.bitmap_cache_entries, mc.bitmap_cache_ways),
+        t=jnp.zeros((), jnp.int32),
+        counters=zero_counters(),
+    )
+
+
+def _acc(c: SimCounters, **kw) -> SimCounters:
+    return c._replace(**{k: getattr(c, k) + v for k, v in kw.items()})
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "mc"))
+def run_interval(
+    kind: str,
+    mc: MachineConfig,
+    state: SimState,
+    vpn: jax.Array,  # int32[A] 4KB page id (global)
+    sp: jax.Array,  # int32[A] superpage id
+    in_dram: jax.Array,  # bool[A] residency at interval start
+    is_write: jax.Array,  # bool[A]
+) -> SimState:
+    """Scan the interval's accesses; returns state with accumulated counters."""
+
+    l1l, l2l = mc.l1_tlb_lat, mc.l2_tlb_lat
+
+    def step(st: SimState, xs):
+        v, s, dram, wr = xs
+        c = st.counters
+        now = st.t
+        mem_rd = jnp.where(dram, mc.t_dr, mc.t_nr)
+        mem_wr = jnp.where(dram, mc.t_dw, mc.t_nw)
+        mem_cost = jnp.where(wr, mem_wr, mem_rd)
+
+        if kind == "flat4k":
+            tlb4, h1, h2 = split_tlb_lookup(st.tlb4, v, now)
+            walk = (~h1) & (~h2)
+            c = _acc(
+                c,
+                cycles_tlb=l1l + jnp.where(~h1, l2l, 0.0),
+                cycles_walk=jnp.where(walk, mc.ptw_refs_4k * mc.t_dr, 0.0),
+                cycles_mem=mem_cost,
+                miss4_l1=(~h1).astype(jnp.float32),
+                miss4_l2=walk.astype(jnp.float32),
+                dram_reads=(dram & ~wr).astype(jnp.float32),
+                dram_writes=(dram & wr).astype(jnp.float32),
+                nvm_reads=(~dram & ~wr).astype(jnp.float32),
+                nvm_writes=(~dram & wr).astype(jnp.float32),
+            )
+            return SimState(tlb4, st.tlb2m, st.bmc, now + 1, c), None
+
+        if kind == "sp2m":
+            tlb2m, h1, h2 = split_tlb_lookup(st.tlb2m, s, now)
+            walk = (~h1) & (~h2)
+            c = _acc(
+                c,
+                cycles_tlb=l1l + jnp.where(~h1, l2l, 0.0),
+                cycles_walk=jnp.where(walk, mc.ptw_refs_2m * mc.t_dr, 0.0),
+                cycles_mem=mem_cost,
+                miss2m_l1=(~h1).astype(jnp.float32),
+                miss2m_l2=walk.astype(jnp.float32),
+                dram_reads=(dram & ~wr).astype(jnp.float32),
+                dram_writes=(dram & wr).astype(jnp.float32),
+                nvm_reads=(~dram & ~wr).astype(jnp.float32),
+                nvm_writes=(~dram & wr).astype(jnp.float32),
+            )
+            return SimState(st.tlb4, tlb2m, st.bmc, now + 1, c), None
+
+        # ---- rainbow: Fig. 6 four cases ----
+        # 4KB TLB holds only DRAM-cached pages; consulted in parallel with the
+        # superpage TLB. Fill 4KB TLB only when the access resolves to DRAM.
+        tlb4, h41, h42 = split_tlb_lookup(st.tlb4, v, now, fill=dram)
+        hit4 = (h41 | h42) & dram  # stale-proof: entry implies residency
+        tlb2m, h21, h22 = split_tlb_lookup(st.tlb2m, s, now)
+        sp_hit = h21 | h22
+        sptw = ~sp_hit
+
+        # Cases 3/4: 4KB miss -> consult bitmap (cache) for the home superpage.
+        need_bitmap = ~hit4
+        bmc, bmc_hit = bitmap_cache_lookup(st.bmc, s, now)
+        bmc_miss = need_bitmap & ~bmc_hit
+        cost_bitmap = jnp.where(
+            need_bitmap, mc.bitmap_cache_lat + jnp.where(bmc_miss, mc.t_nr, 0.0), 0.0
+        )
+        # migrated & 4KB-missed -> remap pointer read from NVM (one t_nr)
+        remap_read = need_bitmap & dram
+        cost_remap = jnp.where(remap_read, mc.remap_read_lat, 0.0)
+
+        cost_tlb = l1l + jnp.where(~h41 & ~h21, l2l, 0.0)
+        cost_walk = jnp.where(need_bitmap & sptw, mc.ptw_refs_2m * mc.t_dr, 0.0)
+
+        c = _acc(
+            c,
+            cycles_tlb=cost_tlb,
+            cycles_walk=cost_walk,
+            cycles_bitmap=cost_bitmap,
+            cycles_remap=cost_remap,
+            cycles_mem=mem_cost,
+            miss4_l1=(dram & ~h41).astype(jnp.float32),
+            miss4_l2=(dram & ~hit4).astype(jnp.float32),
+            miss2m_l1=(~h21).astype(jnp.float32),
+            miss2m_l2=sptw.astype(jnp.float32),
+            bmc_miss=bmc_miss.astype(jnp.float32),
+            dram_reads=(dram & ~wr).astype(jnp.float32),
+            dram_writes=(dram & wr).astype(jnp.float32),
+            nvm_reads=(~dram & ~wr).astype(jnp.float32),
+            nvm_writes=(~dram & wr).astype(jnp.float32),
+        )
+        return SimState(tlb4, tlb2m, bmc, now + 1, c), None
+
+    state, _ = jax.lax.scan(step, state, (vpn, sp, in_dram, is_write))
+    return state

@@ -1,0 +1,1 @@
+from repro.train.step import TrainStepConfig, batch_specs, build_train_step, init_train_state, train_state_specs

@@ -1,0 +1,116 @@
+"""Fault-tolerant training loop.
+
+Large-scale runnability features (DESIGN.md §5), realized host-side:
+  * auto-resume from the newest complete checkpoint (params+opt+data cursor);
+  * preemption handling: SIGTERM/SIGINT trigger an emergency checkpoint before
+    exit (maintenance events on real pods deliver exactly this signal);
+  * step retry with straggler/timeout detection: a step exceeding
+    `step_timeout_s` is logged as a straggler event; `max_retries` transient
+    failures (e.g. ICI link flap surfacing as XlaRuntimeError) re-run the step
+    from the last good state instead of killing the job;
+  * elastic restart: restore_state reshards onto whatever mesh the relaunched
+    job builds (checkpoint/store.py), so N->M pod scaling is a resume;
+  * NaN guard: skips poisoned updates and counts them (data corruption on one
+    host must not kill a 1000-node run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Iterator
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "checkpoints"
+    log_every: int = 10
+    step_timeout_s: float = 600.0
+    max_retries: int = 3
+    nan_guard: bool = True
+
+
+class Trainer:
+    def __init__(
+        self,
+        step_fn: Callable,  # (state, batch) -> (state, metrics); already jitted
+        data: Iterator[dict[str, np.ndarray]],
+        lcfg: LoopConfig,
+        state_shardings: Any = None,
+    ):
+        self.step_fn = step_fn
+        self.data = data
+        self.lcfg = lcfg
+        self.ckpt = CheckpointManager(
+            lcfg.checkpoint_dir, lcfg.checkpoint_every, keep_last=3
+        )
+        self.state_shardings = state_shardings
+        self._preempted = False
+        self.events: list[dict[str, Any]] = []
+
+    def _install_signals(self):
+        def handler(signum, frame):
+            self._preempted = True
+
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                signal.signal(sig, handler)
+            except ValueError:
+                pass  # non-main thread (tests)
+
+    def run(self, state: Any, start_step: int = 0) -> tuple[Any, list[dict]]:
+        self._install_signals()
+        lcfg = self.lcfg
+        history = []
+        step = start_step
+        while step < lcfg.total_steps:
+            batch = next(self.data)
+            t0 = time.time()
+            retries = 0
+            while True:
+                try:
+                    new_state, metrics = self.step_fn(state, batch)
+                    metrics = jax.device_get(metrics)
+                    break
+                except Exception as e:  # transient runtime failure -> retry
+                    retries += 1
+                    self.events.append(
+                        {"step": step, "event": "retry", "error": repr(e)}
+                    )
+                    if retries > lcfg.max_retries:
+                        self.ckpt.maybe_save(step, state, force=True)
+                        raise
+            dt = time.time() - t0
+            if dt > lcfg.step_timeout_s:
+                self.events.append(
+                    {"step": step, "event": "straggler", "duration_s": dt}
+                )
+
+            loss = float(metrics.get("loss", np.nan))
+            if self.lcfg.nan_guard and not np.isfinite(loss):
+                self.events.append({"step": step, "event": "nan_skip"})
+                step += 1
+                continue  # drop the poisoned update, keep old state
+
+            state = new_state
+            history.append({"step": step, "loss": loss, "time_s": dt, **{
+                k: float(np.asarray(v)) for k, v in metrics.items()
+            }})
+            if step % lcfg.log_every == 0:
+                print(f"step {step} loss {loss:.4f} ({dt*1000:.0f} ms)")
+            step += 1
+            self.ckpt.maybe_save(step, state)
+            if self._preempted:
+                self.events.append({"step": step, "event": "preempted"})
+                self.ckpt.maybe_save(step, state, force=True)
+                break
+        else:
+            self.ckpt.maybe_save(step, state, force=True)
+        return state, history

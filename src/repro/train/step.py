@@ -1,0 +1,97 @@
+"""Train-step builder: loss -> grads -> AdamW, with remat, grad accumulation,
+mixed precision, and sharding specs for pjit.
+
+The returned step is a pure function (state, batch) -> (state, metrics), ready for
+jax.jit with donate_argnums=(0,) and the spec trees from train_state_specs().
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.axes import BATCH_AXES
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_specs, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    tp: int = 1
+    remat: str = "full"  # none | full | dots
+    attn_impl: str = "dense"  # dense | chunked
+    accum_steps: int = 1
+    adamw: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+def init_train_state(cfg: ModelConfig, key, tcfg: TrainStepConfig) -> dict[str, Any]:
+    params = M.init_params(cfg, key, tp=tcfg.tp)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def train_state_specs(
+    cfg: ModelConfig, tcfg: TrainStepConfig, dp_size: int = 1
+) -> dict[str, Any]:
+    pspecs = M.param_specs(cfg, tp=tcfg.tp)
+    shapes = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0), tcfg.tp))
+    return {
+        "params": pspecs,
+        "opt": adamw_specs(pspecs, tcfg.adamw, param_shapes=shapes, dp_size=dp_size),
+    }
+
+
+def batch_specs(cfg: ModelConfig, batch_replicated: bool = False) -> dict[str, Any]:
+    dp = None if batch_replicated else BATCH_AXES
+    specs = {"tokens": P(dp, None), "targets": P(dp, None), "loss_mask": P(dp, None)}
+    if cfg.family == "vlm":
+        specs["vision_embeds"] = P(dp, None, None)
+    if cfg.is_encoder_decoder:
+        specs["frames"] = P(dp, None, None)
+    return specs
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    tcfg: TrainStepConfig,
+    sc=None,
+    lr_schedule: Callable | None = None,
+) -> Callable:
+    def loss(params, batch):
+        return M.loss_fn(
+            cfg, params, batch, tp=tcfg.tp, sc=sc,
+            attn_impl=tcfg.attn_impl, remat=tcfg.remat,
+        )
+
+    def grads_of(params, batch):
+        if tcfg.accum_steps == 1:
+            return jax.value_and_grad(loss)(params, batch)
+
+        a = tcfg.accum_steps
+
+        def micro(carry, mb):
+            acc_loss, acc_g = carry
+            l, g = jax.value_and_grad(loss)(params, mb)
+            return (acc_loss + l, jax.tree.map(jnp.add, acc_g, g)), None
+
+        micro_batches = jax.tree.map(
+            lambda x: x.reshape(a, x.shape[0] // a, *x.shape[1:]), batch
+        )
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (tl, tg), _ = jax.lax.scan(micro, (jnp.zeros((), jnp.float32), zero), micro_batches)
+        return tl / a, jax.tree.map(lambda g: g / a, tg)
+
+    def step(state, batch):
+        l, grads = grads_of(state["params"], batch)
+        lr = lr_schedule(state["opt"]["step"]) if lr_schedule else None
+        new_params, new_opt, om = adamw_update(
+            tcfg.adamw, grads, state["opt"], state["params"], lr=lr
+        )
+        metrics = {"loss": l, "lr": jnp.asarray(lr if lr is not None else tcfg.adamw.lr)}
+        metrics.update(om)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return step

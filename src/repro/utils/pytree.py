@@ -1,0 +1,40 @@
+"""Tiny pytree-dataclass helper (no flax available)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+
+def static_field(**kwargs: Any) -> Any:
+    """Mark a dataclass field as static (part of the pytree treedef, not a leaf)."""
+    metadata = dict(kwargs.pop("metadata", {}) or {})
+    metadata["static"] = True
+    return dataclasses.field(metadata=metadata, **kwargs)
+
+
+def pytree_dataclass(cls=None, /, **kwargs):
+    """Decorator: make a (frozen) dataclass registered as a JAX pytree.
+
+    Fields declared with ``static_field()`` become aux data; everything else is a
+    child. Works with jit/scan/vmap and keeps attribute access.
+    """
+
+    def wrap(c):
+        c = dataclasses.dataclass(frozen=True, **kwargs)(c)
+        data_fields = []
+        meta_fields = []
+        for f in dataclasses.fields(c):
+            if f.metadata.get("static", False):
+                meta_fields.append(f.name)
+            else:
+                data_fields.append(f.name)
+        jax.tree_util.register_dataclass(
+            c, data_fields=data_fields, meta_fields=meta_fields
+        )
+        return c
+
+    if cls is None:
+        return wrap
+    return wrap(cls)

@@ -1,0 +1,74 @@
+"""Migration bitmap + remap tables (paper §III-D/E): invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitmap as bm
+from repro.core import remap as rm
+
+
+def test_bitmap_set_get_roundtrip(rng):
+    b = bm.bitmap_init(8, 64)
+    sp = jnp.array([0, 3, 3, 7], jnp.int32)
+    pg = jnp.array([0, 31, 32, 63], jnp.int32)
+    b = bm.bitmap_update(b, sp, pg, True)
+    assert bool(bm.bitmap_get(b, jnp.int32(3), jnp.int32(31)))
+    assert bool(bm.bitmap_get(b, jnp.int32(3), jnp.int32(32)))
+    assert not bool(bm.bitmap_get(b, jnp.int32(3), jnp.int32(33)))
+    b = bm.bitmap_update(b, jnp.array([3], jnp.int32), jnp.array([31], jnp.int32), False)
+    assert not bool(bm.bitmap_get(b, jnp.int32(3), jnp.int32(31)))
+    assert bool(bm.bitmap_get(b, jnp.int32(3), jnp.int32(32)))  # untouched
+
+
+def test_bitmap_duplicates_safe():
+    b = bm.bitmap_init(2, 32)
+    sp = jnp.zeros(10, jnp.int32)
+    pg = jnp.full(10, 5, jnp.int32)
+    b = bm.bitmap_update(b, sp, pg, True)
+    assert int(bm.bitmap_popcount(b)[0]) == 1
+
+
+def test_bitmap_cache_lru():
+    c = bm.bitmap_cache_init(entries=8, ways=2)  # 4 sets x 2 ways
+    c, h = bm.bitmap_cache_lookup(c, jnp.int32(0), jnp.int32(1))
+    assert not bool(h)
+    c, h = bm.bitmap_cache_lookup(c, jnp.int32(0), jnp.int32(2))
+    assert bool(h)
+    # fill the set of psn 0 (psns congruent mod 4): 0, 4, 8 -> evicts LRU (0? no, 4)
+    c, _ = bm.bitmap_cache_lookup(c, jnp.int32(4), jnp.int32(3))
+    c, _ = bm.bitmap_cache_lookup(c, jnp.int32(8), jnp.int32(4))  # evicts 4 (LRU=0@2? 0 touched t=2, 4 t=3) -> evicts 0
+    c, h = bm.bitmap_cache_lookup(c, jnp.int32(4), jnp.int32(5))
+    assert bool(h)  # 4 still resident
+
+
+def test_storage_overhead_matches_paper():
+    assert bm.storage_overhead_bytes(4000, 512) == 4000 * (4 + 64)  # 272 KB
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 7), st.integers(0, 15)), min_size=1, max_size=40))
+def test_remap_consistency_invariant(ops):
+    """bitmap bit set <=> remap slot >= 0, under arbitrary install/evict mixes."""
+    state = rm.remap_init(8, 16)
+    for i, (sp, pg) in enumerate(ops):
+        if i % 3 == 2:
+            state = rm.remap_evict(state, jnp.array([sp], jnp.int32), jnp.array([pg], jnp.int32))
+        else:
+            state = rm.remap_install(
+                state, jnp.array([sp], jnp.int32), jnp.array([pg], jnp.int32),
+                jnp.array([i % 5], jnp.int32),
+            )
+        assert bool(rm.check_consistency(state))
+
+
+def test_translate_redirects_only_installed():
+    state = rm.remap_init(4, 8)
+    state = rm.remap_install(
+        state, jnp.array([1], jnp.int32), jnp.array([3], jnp.int32), jnp.array([7], jnp.int32)
+    )
+    in_fast, slot = rm.translate(
+        state, jnp.array([1, 1, 0], jnp.int32), jnp.array([3, 4, 3], jnp.int32)
+    )
+    assert np.asarray(in_fast).tolist() == [True, False, False]
+    assert int(slot[0]) == 7 and int(slot[1]) == -1

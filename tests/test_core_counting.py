@@ -1,0 +1,84 @@
+"""Two-stage access counting (paper §III-B): unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import counting
+
+
+def test_stage1_matches_bincount(rng):
+    nsp = 64
+    sp = rng.integers(-1, nsp, 500).astype(np.int32)
+    wr = rng.random(500) < 0.3
+    st1 = counting.stage1_record(counting.stage1_init(nsp), jnp.asarray(sp), jnp.asarray(wr), 2)
+    got = counting.counter_value(st1.counts)
+    want = np.zeros(nsp, np.int64)
+    for s, w in zip(sp, wr):
+        if s >= 0:
+            want[s] += 2 if w else 1
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_counter_saturates_and_overflows():
+    st1 = counting.stage1_init(2)
+    ids = jnp.zeros(1000, jnp.int32)
+    wr = jnp.ones(1000, bool)
+    for _ in range(40):  # 40*2000 >> 2^15
+        st1 = counting.stage1_record(st1, ids, wr, 2)
+    val = counting.counter_value(st1.counts)
+    assert int(val[0]) == counting.COUNTER_MAX + 1  # overflow => definitely hot
+    assert int(val[1]) == 0
+
+
+def test_select_top_n_and_padding():
+    st1 = counting.stage1_init(5)
+    st1 = counting.stage1_record(
+        st1, jnp.array([0, 0, 0, 3, 3, 4], jnp.int32), jnp.zeros(6, bool), 2
+    )
+    psn, vals = counting.select_top_n(st1, 8)
+    assert psn.shape == (8,)
+    assert int(psn[0]) == 0 and int(psn[1]) == 3
+    assert set(np.asarray(psn[vals == 0]).tolist()) <= {-1}
+
+
+def test_stage2_counts_only_monitored(rng):
+    nsp, pages, topn = 16, 8, 3
+    mon = jnp.array([2, 9, 14], jnp.int32)
+    st2 = counting.stage2_begin(mon, pages)
+    sp = rng.integers(0, nsp, 400).astype(np.int32)
+    pg = rng.integers(0, pages, 400).astype(np.int32)
+    st2 = counting.stage2_record(st2, jnp.asarray(sp), jnp.asarray(pg), jnp.zeros(400, bool), 1)
+    got = np.asarray(counting.counter_value(st2.counts))
+    want = np.zeros((topn, pages), np.int64)
+    for s, p in zip(sp, pg):
+        for row, m in enumerate([2, 9, 14]):
+            if s == m:
+                want[row, p] += 1
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(st.tuples(st.integers(-1, 15), st.integers(0, 7), st.booleans()),
+             min_size=1, max_size=120),
+    st.integers(1, 8),
+)
+def test_property_counts_conserved(accesses, topn):
+    """Sum of stage-1 counter values == weighted number of valid accesses."""
+    sp = jnp.array([a[0] for a in accesses], jnp.int32)
+    pg = jnp.array([a[1] for a in accesses], jnp.int32)
+    wr = jnp.array([a[2] for a in accesses], bool)
+    st1 = counting.stage1_record(counting.stage1_init(16), sp, wr, 2)
+    total = int(counting.counter_value(st1.counts).sum())
+    want = sum((2 if w else 1) for s, _, w in accesses if s >= 0)
+    assert total == want
+
+
+def test_storage_overhead_matches_table6():
+    # paper Table VI: 1 TB PCM -> 1 MB stage-1 counters, N KB stage-2, 4N PSN
+    o = counting.storage_overhead_bytes(512 * 1024, 100, 512)
+    assert o["stage1_counters"] == 1024 * 1024
+    assert o["stage2_counters"] == 100 * 1024
+    assert o["stage2_psn_tags"] == 400

@@ -1,0 +1,128 @@
+"""Utility migration (Eq. 1/2) + split TLB model: unit + property tests."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import migration as mig
+from repro.core import tlb
+
+TIMING = mig.make_timing(t_nr=62.4, t_nw=547.2, t_dr=43.2, t_dw=91.2,
+                         t_mig=1000.0, t_writeback=1000.0)
+
+
+def test_eq1_benefit_values():
+    b = mig.migration_benefit(jnp.float32(10), jnp.float32(5), TIMING)
+    want = (62.4 - 43.2) * 10 + (547.2 - 91.2) * 5 - 1000.0
+    assert abs(float(b) - want) < 1e-3
+
+
+def test_eq2_dirty_victim_pays_writeback():
+    clean = mig.swap_benefit(jnp.float32(50), jnp.float32(0), jnp.float32(5),
+                             jnp.float32(0), TIMING, jnp.bool_(False))
+    dirty = mig.swap_benefit(jnp.float32(50), jnp.float32(0), jnp.float32(5),
+                             jnp.float32(0), TIMING, jnp.bool_(True))
+    assert abs(float(clean) - float(dirty) - 1000.0) < 1e-3
+
+
+def _plan(cand_r, dram, threshold=0.0):
+    k = len(cand_r)
+    return mig.plan_migrations(
+        jnp.arange(k, dtype=jnp.int32),
+        jnp.zeros(k, jnp.int32),
+        jnp.asarray(cand_r, jnp.float32),
+        jnp.zeros(k, jnp.float32),
+        dram,
+        TIMING,
+        jnp.float32(threshold),
+    )
+
+
+def test_plan_prefers_free_then_clean_then_dirty():
+    import dataclasses
+
+    d = mig.dram_init(3)
+    # slot 0 dirty, slot 1 clean, slot 2 free
+    d = dataclasses.replace(
+        d,
+        slot_state=jnp.array([2, 1, 0], jnp.int32),
+        slot_sp=jnp.array([5, 6, -1], jnp.int32),
+        slot_page=jnp.array([0, 0, -1], jnp.int32),
+    )
+    plan = _plan([1000.0, 900.0, 800.0], d)
+    # best candidate lands on the free slot
+    order = {int(s) for s in np.asarray(plan.dst_slot[plan.migrate])}
+    assert 2 in order
+    got = np.asarray(plan.dst_slot)
+    assert got[0] == 2  # hottest -> free slot
+
+
+def test_plan_no_duplicate_slots():
+    d = mig.dram_init(4)
+    plan = _plan([500.0] * 8, d)
+    slots = np.asarray(plan.dst_slot[plan.migrate])
+    assert len(slots) == len(set(slots.tolist()))
+
+
+def test_threshold_blocks_cold_candidates():
+    d = mig.dram_init(4)
+    plan = _plan([10.0, 5.0], d, threshold=1e9)
+    assert int(plan.migrate.sum()) == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(0, 1e4), min_size=1, max_size=16), st.integers(1, 8))
+def test_property_plan_within_capacity(reads, slots):
+    d = mig.dram_init(slots)
+    plan = _plan(reads, d)
+    assert int(plan.migrate.sum()) <= slots
+    sl = np.asarray(plan.dst_slot[plan.migrate])
+    assert len(sl) == len(set(sl.tolist()))
+    assert (sl >= 0).all() and (sl < slots).all()
+
+
+def test_adapt_threshold_rises_with_evictions_and_decays():
+    t0 = jnp.float32(100.0)
+    t1 = mig.adapt_threshold(t0, jnp.int32(10))
+    assert float(t1) > float(t0)
+    t2 = mig.adapt_threshold(t1, jnp.int32(0))
+    assert float(t2) < float(t1)
+
+
+# ---------------------------------------------------------------------------
+
+
+def test_tlb_hit_after_fill_and_lru_eviction():
+    t = tlb.tlb_init(entries=4, ways=4)  # 1 set, 4 ways
+    now = 0
+    for v in [1, 2, 3, 4]:
+        now += 1
+        t, h = tlb.tlb_lookup(t, jnp.int32(v), jnp.int32(now))
+        assert not bool(h)
+    now += 1
+    t, h = tlb.tlb_lookup(t, jnp.int32(1), jnp.int32(now))
+    assert bool(h)
+    now += 1
+    t, _ = tlb.tlb_lookup(t, jnp.int32(5), jnp.int32(now))  # evicts LRU = 2
+    now += 1
+    t, h2 = tlb.tlb_lookup(t, jnp.int32(2), jnp.int32(now))
+    assert not bool(h2)
+    now += 1
+    t, h1 = tlb.tlb_lookup(t, jnp.int32(1), jnp.int32(now))
+    assert bool(h1)
+
+
+def test_tlb_invalidate():
+    t = tlb.tlb_init(4, 4)
+    t, _ = tlb.tlb_lookup(t, jnp.int32(9), jnp.int32(1))
+    t = tlb.tlb_invalidate(t, jnp.int32(9))
+    t, h = tlb.tlb_lookup(t, jnp.int32(9), jnp.int32(2))
+    assert not bool(h)
+
+
+def test_split_tlb_l2_fills_l1():
+    s = tlb.split_tlb_init(2, 2, 8, 8)
+    s, h1, h2 = tlb.split_tlb_lookup(s, jnp.int32(7), jnp.int32(1))
+    assert not bool(h1) and not bool(h2)
+    s, h1, h2 = tlb.split_tlb_lookup(s, jnp.int32(7), jnp.int32(2))
+    assert bool(h1) and bool(h2)

@@ -1,0 +1,90 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.block_gather.ops import migrate_blocks
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.page_counter.ops import count_accesses
+from repro.kernels.rainbow_attention.ops import paged_decode_attention
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,hp,kvs,hd,block,nblk", [
+    (1, 4, 4, 16, 4, 3),
+    (2, 8, 4, 32, 8, 6),
+    (3, 8, 2, 64, 16, 4),
+])
+def test_rainbow_attention_sweep(b, hp, kvs, hd, block, nblk, dtype):
+    key = jax.random.PRNGKey(b * 7 + hp)
+    npool = b * nblk + 4
+    q = jax.random.normal(key, (b, hp, hd), dtype)
+    pk = jax.random.normal(jax.random.PRNGKey(1), (npool, block, kvs, hd), dtype)
+    pv = jax.random.normal(jax.random.PRNGKey(2), (npool, block, kvs, hd), dtype)
+    vidx = jax.random.randint(jax.random.PRNGKey(3), (b, nblk), 0, npool)
+    length = jnp.int32(nblk * block - 2)
+    ref = paged_decode_attention(q, pk, pv, vidx, length, force="ref")
+    ker = paged_decode_attention(q, pk, pv, vidx, length, force="interpret")
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(ker, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("a,nsp,pages,n", [(100, 16, 8, 4), (1000, 32, 16, 8),
+                                           (517, 8, 32, 2)])
+def test_page_counter_sweep(a, nsp, pages, n, rng):
+    sp = jnp.asarray(rng.integers(-1, nsp, a).astype(np.int32))
+    pg = jnp.asarray(rng.integers(0, pages, a).astype(np.int32))
+    w = jnp.asarray(rng.integers(1, 4, a).astype(np.uint32))
+    mon = jnp.asarray(
+        np.concatenate([rng.choice(nsp, n - 1, replace=False), [-1]]).astype(np.int32)
+    )
+    s1r, s2r = count_accesses(sp, pg, w, mon, nsp, pages, force="ref")
+    s1k, s2k = count_accesses(sp, pg, w, mon, nsp, pages, force="interpret")
+    np.testing.assert_array_equal(np.asarray(s1r, np.int64), np.asarray(s1k, np.int64))
+    np.testing.assert_array_equal(np.asarray(s2r, np.int64), np.asarray(s2k, np.int64))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("nb,hot,k", [(24, 6, 6), (8, 3, 5), (64, 16, 1)])
+def test_block_gather_sweep(nb, hot, k, dtype, rng):
+    cap = jax.random.normal(jax.random.PRNGKey(0), (nb, 4, 2, 8), dtype)
+    hotp = jax.random.normal(jax.random.PRNGKey(1), (hot, 4, 2, 8), dtype)
+    src = jnp.asarray(rng.integers(-1, nb, k).astype(np.int32))
+    dst_pool = rng.choice(hot, min(k, hot), replace=False)
+    dst = jnp.asarray(
+        np.resize(dst_pool, k).astype(np.int32)
+    )
+    # ensure valid lanes have unique dst
+    srcs = np.array(src)  # writable copy
+    seen = set()
+    for i in range(k):
+        if srcs[i] >= 0 and int(dst[i]) in seen:
+            srcs[i] = -1
+        elif srcs[i] >= 0:
+            seen.add(int(dst[i]))
+    src = jnp.asarray(srcs)
+    r = migrate_blocks(cap, hotp, src, dst, force="ref")
+    kk = migrate_blocks(cap, hotp, src, dst, force="interpret")
+    np.testing.assert_array_equal(np.asarray(r, np.float32), np.asarray(kk, np.float32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,hd,causal", [
+    (1, 128, 2, 32, True),
+    (2, 256, 4, 64, True),
+    (1, 256, 1, 128, False),
+])
+def test_flash_attention_sweep(b, s, h, hd, causal, dtype):
+    key = jax.random.PRNGKey(s + hd)
+    q = jax.random.normal(key, (b, s, h, hd), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, hd), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, h, hd), dtype)
+    ref = attention(q, k, v, causal=causal, force="ref")
+    ker = attention(q, k, v, causal=causal, force="interpret")
+    tol = 3e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(
+        np.asarray(ker, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )

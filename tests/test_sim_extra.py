@@ -1,0 +1,62 @@
+"""Additional Layer-A coverage: mixes, sensitivity direction, trace calibration."""
+import numpy as np
+import pytest
+
+from repro.sim.config import APPS, MIXES, MachineConfig, PAGES_PER_SP
+from repro.sim.runner import simulate
+from repro.sim.trace import generate
+
+
+def test_mix_trace_combines_address_spaces():
+    tr = generate("mix2", seed=3, interval=0, accesses=8000)
+    members = MIXES["mix2"]
+    assert tr.sp.shape[0] == 8000 - 8000 % len(members)
+    # superpage ids must span multiple member regions
+    assert tr.num_superpages > max(
+        generate(m, 3, 0, 100).num_superpages for m in members
+    )
+
+
+def test_trace_hot_set_persists_across_intervals():
+    """History-based migration only works if hot pages persist (paper premise)."""
+    t0 = generate("soplex", seed=5, interval=1, accesses=20000)
+    t1 = generate("soplex", seed=5, interval=2, accesses=20000)
+
+    def hot_set(tr, k=50):
+        counts = np.bincount(tr.vpn.astype(np.int64), minlength=tr.footprint_pages)
+        return set(np.argsort(-counts)[:k].tolist())
+
+    overlap = len(hot_set(t0) & hot_set(t1)) / 50.0
+    # zipf sampling noise jitters the top-k boundary; >30% overlap of the
+    # traffic-weighted head is what history-based migration needs
+    assert overlap > 0.3, f"hot-set overlap too low: {overlap}"
+
+
+def test_trace_respects_footprint_bounds():
+    for app in ("GUPS", "bodytrack"):
+        tr = generate(app, seed=1, interval=0, accesses=5000)
+        assert tr.vpn.max() < tr.footprint_pages
+        assert (tr.page >= 0).all() and (tr.page < PAGES_PER_SP).all()
+
+
+def test_mix_runs_through_rainbow_policy():
+    m = simulate("mix1", "rainbow", intervals=2, accesses=16000)
+    assert m.ipc > 0 and np.isfinite(m.mpki)
+
+
+def test_higher_threshold_migrates_less():
+    """§IV-F: raising the hot-page threshold reduces migrations (and IPC)."""
+    lo = simulate("streamcluster", "rainbow",
+                  mc=MachineConfig(mig_threshold=0.0), intervals=4, accesses=25000)
+    hi = simulate("streamcluster", "rainbow",
+                  mc=MachineConfig(mig_threshold=5e4), intervals=4, accesses=25000)
+    assert hi.migrations < lo.migrations
+
+
+def test_slower_nvm_migrates_more():
+    """§IV-F: larger NVM latencies raise Eq.1 benefit -> more pages migrate."""
+    base = MachineConfig()
+    slow = MachineConfig(t_nr=base.t_nr * 2, t_nw=base.t_nw * 2)
+    m_base = simulate("soplex", "rainbow", mc=base, intervals=4, accesses=25000)
+    m_slow = simulate("soplex", "rainbow", mc=slow, intervals=4, accesses=25000)
+    assert m_slow.migrations >= m_base.migrations

@@ -1,0 +1,154 @@
+"""End-to-end behaviour tests: training loop fault tolerance, simulator policy
+ordering (the paper's headline directions), sharded step execution."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.data.pipeline import SyntheticLM
+from repro.optim import AdamWConfig
+from repro.sim.runner import simulate
+from repro.train.loop import LoopConfig, Trainer
+from repro.train.step import TrainStepConfig, build_train_step, init_train_state
+
+
+def test_training_loss_decreases(tmp_path):
+    cfg = get_reduced_config("qwen3-0.6b")
+    tcfg = TrainStepConfig(tp=1, remat="none", adamw=AdamWConfig(lr=3e-3))
+    state = init_train_state(cfg, jax.random.PRNGKey(0), tcfg)
+    step = jax.jit(build_train_step(cfg, tcfg))
+    data = iter(SyntheticLM(cfg.vocab_size, 32, 8, seed=5))
+    trainer = Trainer(step, data, LoopConfig(
+        total_steps=30, checkpoint_every=10, checkpoint_dir=str(tmp_path),
+        log_every=1000))
+    state, hist = trainer.run(state, 0)
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first - 0.2, f"loss did not fall: {first:.3f} -> {last:.3f}"
+
+
+def test_trainer_resume_from_checkpoint(tmp_path):
+    cfg = get_reduced_config("smollm-360m")
+    tcfg = TrainStepConfig(tp=1, remat="none")
+    state = init_train_state(cfg, jax.random.PRNGKey(0), tcfg)
+    step = jax.jit(build_train_step(cfg, tcfg))
+    data = iter(SyntheticLM(cfg.vocab_size, 16, 4, seed=1))
+    tr = Trainer(step, data, LoopConfig(
+        total_steps=6, checkpoint_every=3, checkpoint_dir=str(tmp_path),
+        log_every=1000))
+    tr.run(state, 0)
+    # a "relaunched job" resumes from the saved step
+    state2, start = tr.ckpt.restore_or_init(
+        lambda: init_train_state(cfg, jax.random.PRNGKey(0), tcfg)
+    )
+    assert start >= 3
+    assert int(state2["opt"]["step"]) == start
+
+
+def test_trainer_retries_transient_failures(tmp_path):
+    cfg = get_reduced_config("smollm-360m")
+    tcfg = TrainStepConfig(tp=1, remat="none")
+    state = init_train_state(cfg, jax.random.PRNGKey(0), tcfg)
+    real = jax.jit(build_train_step(cfg, tcfg))
+    calls = {"n": 0}
+
+    def flaky(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("simulated ICI link flap")
+        return real(state, batch)
+
+    data = iter(SyntheticLM(cfg.vocab_size, 16, 4, seed=2))
+    tr = Trainer(flaky, data, LoopConfig(
+        total_steps=3, checkpoint_every=100, checkpoint_dir=str(tmp_path),
+        log_every=1000))
+    _, hist = tr.run(state, 0)
+    assert len(hist) == 3
+    assert any(e["event"] == "retry" for e in tr.events)
+
+
+def test_trainer_nan_guard(tmp_path):
+    cfg = get_reduced_config("smollm-360m")
+    tcfg = TrainStepConfig(tp=1, remat="none")
+    state = init_train_state(cfg, jax.random.PRNGKey(0), tcfg)
+    real = jax.jit(build_train_step(cfg, tcfg))
+    calls = {"n": 0}
+
+    def poisoned(state, batch):
+        s, m = real(state, batch)
+        calls["n"] += 1
+        if calls["n"] == 2:
+            m = dict(m)
+            m["loss"] = jnp.float32(np.nan)
+        return s, m
+
+    data = iter(SyntheticLM(cfg.vocab_size, 16, 4, seed=3))
+    tr = Trainer(poisoned, data, LoopConfig(
+        total_steps=4, checkpoint_every=100, checkpoint_dir=str(tmp_path),
+        log_every=1000))
+    _, hist = tr.run(state, 0)
+    assert any(e["event"] == "nan_skip" for e in tr.events)
+    assert len(hist) == 3  # the poisoned step was dropped
+
+
+def test_sharded_train_step_single_device_mesh():
+    """The pjit path with sharding constraints runs on a real mesh."""
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.sharding import make_constrainer
+
+    cfg = get_reduced_config("qwen3-0.6b")
+    mesh = make_test_mesh(devices=1, model=1)
+    sc = make_constrainer(mesh)
+    tcfg = TrainStepConfig(tp=1, remat="full")
+    state = init_train_state(cfg, jax.random.PRNGKey(0), tcfg)
+    step = jax.jit(build_train_step(cfg, tcfg, sc=sc))
+    data = SyntheticLM(cfg.vocab_size, 16, 4, seed=4)
+    with mesh:
+        _, metrics = step(state, data.next_batch())
+    assert bool(jnp.isfinite(metrics["loss"]))
+
+
+# ---------------------------------------------------------------------------
+# Layer-A simulator: headline directional claims on a quick configuration
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def sim_results():
+    out = {}
+    for pol in ("flat-static", "hscc-4kb-mig", "rainbow", "dram-only"):
+        out[pol] = simulate("soplex", pol, intervals=4, accesses=25_000)
+    return out
+
+
+def test_sim_superpages_crush_mpki(sim_results):
+    """Paper Fig. 7: superpage policies cut TLB MPKI by a large factor.
+
+    (The paper reports -99.8% with full-size TLBs; the 1/16-scaled TLBs here
+    cap the reduction for mid-size working sets — see EXPERIMENTS.md §Repro.)
+    """
+    assert sim_results["rainbow"].mpki < 0.2 * sim_results["flat-static"].mpki
+
+
+def test_sim_rainbow_beats_flat_ipc(sim_results):
+    assert sim_results["rainbow"].ipc > sim_results["flat-static"].ipc
+
+
+def test_sim_dram_only_is_upper_bound(sim_results):
+    for pol in ("flat-static", "hscc-4kb-mig", "rainbow"):
+        assert sim_results["dram-only"].ipc >= sim_results[pol].ipc * 0.99
+
+
+def test_sim_rainbow_traffic_below_2mb_migration():
+    r = simulate("GUPS", "rainbow", intervals=3, accesses=30_000)
+    h2 = simulate("GUPS", "hscc-2mb-mig", intervals=3, accesses=30_000)
+    if h2.mig_bytes > 0:
+        assert r.mig_bytes <= h2.mig_bytes
+
+
+def test_sim_breakdown_fields_present(sim_results):
+    b = sim_results["rainbow"].breakdown
+    for k in ("cycles_tlb", "cycles_walk", "cycles_bitmap", "cycles_remap",
+              "cycles_mem", "cycles_mig"):
+        assert k in b and b[k] >= 0
