@@ -1,0 +1,109 @@
+"""Microbenchmark: interval-control-loop throughput (accesses/sec).
+
+Compares three ways of driving the same Rainbow simulation:
+
+  looped-host     — the pre-refactor path: per-interval host trace generation +
+                    one device dispatch per interval + eager (unjitted) Python
+                    controller round-trips (sim.runner.simulate_eager).
+  scanned-device  — the MemoryEngine: traces pre-generated and staged once,
+                    the full simulation runs as a single lax.scan jit
+                    (engine.simloop.engine_run); steady-state scan time.
+  scanned+fused   — same scan with the fused one-pass counting kernel path
+                    ("ref" oracle off-TPU, the Pallas kernel on TPU).
+
+Run: PYTHONPATH=src python -m benchmarks.engine_throughput
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import QUICK, emit
+from repro.sim.config import MachineConfig
+from repro.sim.runner import simulate_eager
+
+APP = "streamcluster"
+POLICY = "rainbow"
+INTERVALS = 6 if QUICK else 10
+ACCESSES = 20_000 if QUICK else 120_000
+SEED = 7
+
+
+def _bench(fn, reps: int = 3) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _measure() -> dict:
+    from repro.engine import simloop
+
+    mc = MachineConfig()
+    total_accesses = INTERVALS * ACCESSES
+
+    # --- looped host (one interval per dispatch; includes per-interval
+    # trace generation, exactly as the pre-refactor runner executed) ---
+    simulate_eager(APP, POLICY, mc, intervals=1, accesses=ACCESSES, seed=SEED)  # warm caches
+    t_host = _bench(
+        lambda: simulate_eager(
+            APP, POLICY, mc, intervals=INTERVALS, accesses=ACCESSES, seed=SEED
+        ),
+        reps=1 if QUICK else 2,
+    )
+
+    rows = [{
+        "mode": "looped-host",
+        "intervals": INTERVALS,
+        "accesses_per_interval": ACCESSES,
+        "seconds": round(t_host, 4),
+        "accesses_per_sec": round(total_accesses / t_host, 1),
+    }]
+
+    # --- scanned device engine (counting backends) ---
+    backends = ["jax", "ref"] + (["pallas"] if jax.default_backend() == "tpu" else [])
+    results = {"looped-host": total_accesses / t_host}
+    chunks, meta = simloop.make_chunks(APP, POLICY, mc, SEED, INTERVALS, ACCESSES)
+    for backend in backends:
+        spec = simloop.EngineSpec(
+            policy=POLICY, mc=mc,
+            num_superpages=meta["num_superpages"],
+            footprint_pages=meta["footprint_pages"],
+            counter_backend=backend,
+        )
+        state0 = simloop.engine_init(spec)
+        out = simloop.engine_run(spec, state0, chunks)  # compile + warm
+        jax.block_until_ready(out)
+
+        def scan_once():
+            jax.block_until_ready(simloop.engine_run(spec, state0, chunks))
+
+        t_scan = _bench(scan_once)
+        mode = "scanned-device" if backend == "jax" else f"scanned+fused({backend})"
+        rows.append({
+            "mode": mode,
+            "intervals": INTERVALS,
+            "accesses_per_interval": ACCESSES,
+            "seconds": round(t_scan, 4),
+            "accesses_per_sec": round(total_accesses / t_scan, 1),
+        })
+        results[mode] = total_accesses / t_scan
+
+    speedup = results["scanned-device"] / results["looped-host"]
+    return {"rows": rows, "speedup": speedup}
+
+
+def run() -> None:
+    t0 = time.time()
+    out = _measure()
+    emit(
+        "engine_throughput", out["rows"], t0,
+        derived=f"scanned_vs_host_speedup={out['speedup']:.1f}x",
+    )
+
+
+if __name__ == "__main__":
+    run()

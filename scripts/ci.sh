@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Tier-1 verify + engine smoke, reproducible from a clean checkout:
+#   pip install -r requirements.txt && bash scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: unit + system tests =="
+python -m pytest -x -q
+
+echo "== engine smoke: 2-interval scanned sim (rainbow + flat-static) =="
+python - <<'EOF'
+from repro.sim.runner import simulate
+
+for policy in ("rainbow", "flat-static"):
+    m = simulate("streamcluster", policy, intervals=2, accesses=4000)
+    assert m.ipc > 0 and m.total_cycles > 0, (policy, m)
+    print(f"  {policy:12s} ipc={m.ipc:.4f} mpki={m.mpki:.4f} "
+          f"migrations={m.migrations}")
+print("engine smoke OK")
+EOF

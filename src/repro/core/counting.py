@@ -52,13 +52,10 @@ def stage2_init(top_n: int, pages_per_sp: int) -> Stage2State:
 
 def _saturating_add_u16(counts: jax.Array, idx: jax.Array, inc: jax.Array) -> jax.Array:
     """Scatter-add with 15-bit saturation + sticky overflow bit (Fig. 4 layout)."""
-    val = (counts & jnp.uint16(COUNTER_MAX)).astype(jnp.uint32)
-    ovf = counts & OVERFLOW_BIT
-    add = jnp.zeros_like(val).at[idx].add(inc.astype(jnp.uint32), mode="drop")
-    new = val + add
-    new_ovf = ovf | jnp.where(new > COUNTER_MAX, OVERFLOW_BIT, jnp.uint16(0))
-    new_val = jnp.minimum(new, COUNTER_MAX).astype(jnp.uint16)
-    return new_val | new_ovf
+    add = jnp.zeros(counts.shape, jnp.uint32).at[idx].add(
+        inc.astype(jnp.uint32), mode="drop"
+    )
+    return saturating_merge(counts, add)
 
 
 def counter_value(counts: jax.Array) -> jax.Array:
@@ -66,6 +63,21 @@ def counter_value(counts: jax.Array) -> jax.Array:
     val = (counts & jnp.uint16(COUNTER_MAX)).astype(jnp.int32)
     ovf = (counts & OVERFLOW_BIT) != 0
     return jnp.where(ovf, jnp.int32(COUNTER_MAX + 1), val)
+
+
+def saturating_merge(counts: jax.Array, hist: jax.Array) -> jax.Array:
+    """Fold a pre-reduced uint32 histogram into 15-bit+overflow counters.
+
+    This is the back half of `_saturating_add_u16` — the engine's fused counting
+    kernel (kernels/page_counter) produces the batch histogram in one device
+    pass; merging it here is bit-identical to the scatter-add path because the
+    scatter path also reduces the batch in uint32 before saturating once.
+    """
+    val = (counts & jnp.uint16(COUNTER_MAX)).astype(jnp.uint32)
+    ovf = counts & OVERFLOW_BIT
+    new = val + hist.astype(jnp.uint32)
+    new_ovf = ovf | jnp.where(new > COUNTER_MAX, OVERFLOW_BIT, jnp.uint16(0))
+    return jnp.minimum(new, COUNTER_MAX).astype(jnp.uint16) | new_ovf
 
 
 def stage1_record(
@@ -79,9 +91,19 @@ def stage1_record(
     NVM writes carry a higher weight than reads (paper: "NVM write operations have a
     higher weighting of the counter value").
     """
+    weight = jnp.where(is_write, write_weight, 1).astype(jnp.uint32)
+    return stage1_record_weighted(state, superpage_ids, weight)
+
+
+def stage1_record_weighted(
+    state: Stage1State,
+    superpage_ids: jax.Array,  # int32[B] superpage index per access (<0 = ignore)
+    weight: jax.Array,  # uint32[B] per-lane increment (0 = inert lane)
+) -> Stage1State:
+    """Count one batch at superpage granularity with explicit per-lane weights
+    (Layer B feeds quantized attention mass here)."""
     valid = superpage_ids >= 0
-    inc = jnp.where(is_write, write_weight, 1).astype(jnp.uint32)
-    inc = jnp.where(valid, inc, 0)
+    inc = jnp.where(valid, weight.astype(jnp.uint32), 0)
     idx = jnp.where(valid, superpage_ids, 0)
     # mode="drop" + zeroed increments keeps invalid lanes inert.
     return Stage1State(counts=_saturating_add_u16(state.counts, idx, inc))
@@ -124,6 +146,24 @@ def _psn_to_slot(psn_table: jax.Array, superpage_ids: jax.Array) -> jax.Array:
     return jnp.where(any_hit, slot, -1)
 
 
+def stage2_record_weighted(
+    state: Stage2State,
+    superpage_ids: jax.Array,  # int32[B] (<0 = ignore)
+    page_offsets: jax.Array,  # int32[B] small-page index within superpage
+    weight: jax.Array,  # uint32[B] per-lane increment (0 = inert lane)
+) -> Stage2State:
+    """Count accesses in monitored superpages at small-page grain, with an
+    explicit per-lane weight. Read/write separation is expressed by the caller's
+    weights (e.g. `~is_write` for a read counter) rather than index masking."""
+    slot = _psn_to_slot(state.psn, superpage_ids)
+    valid = slot >= 0
+    n, p = state.counts.shape
+    flat_idx = jnp.where(valid, slot * p + page_offsets, 0)
+    inc = jnp.where(valid, weight.astype(jnp.uint32), 0)
+    flat = _saturating_add_u16(state.counts.reshape(-1), flat_idx, inc)
+    return Stage2State(psn=state.psn, counts=flat.reshape(n, p))
+
+
 def stage2_record(
     state: Stage2State,
     superpage_ids: jax.Array,  # int32[B]
@@ -132,14 +172,8 @@ def stage2_record(
     write_weight: int = 2,
 ) -> Stage2State:
     """Count accesses that fall inside monitored superpages at small-page grain."""
-    slot = _psn_to_slot(state.psn, superpage_ids)
-    valid = slot >= 0
-    n, p = state.counts.shape
-    flat_idx = jnp.where(valid, slot * p + page_offsets, 0)
-    inc = jnp.where(is_write, write_weight, 1).astype(jnp.uint32)
-    inc = jnp.where(valid, inc, 0)
-    flat = _saturating_add_u16(state.counts.reshape(-1), flat_idx, inc)
-    return Stage2State(psn=state.psn, counts=flat.reshape(n, p))
+    weight = jnp.where(is_write, write_weight, 1).astype(jnp.uint32)
+    return stage2_record_weighted(state, superpage_ids, page_offsets, weight)
 
 
 def stage2_split_rw(

@@ -9,18 +9,23 @@ Composes the pieces of §III into a single functional controller:
                         hot-page classification, utility-admission (Eq. 1/2) against
                         the free/clean/dirty slot manager, remap/bitmap install and
                         evict, adaptive threshold update.
+  interval_step()    -> observe + end_interval fused into one scannable function:
+                        `engine.simloop` runs a whole simulation as a single
+                        lax.scan over these steps.
 
-Both the Layer-A simulator and the Layer-B serving runtime drive this controller;
-only the meaning of "access" differs (post-LLC memory reference vs KV-block read).
+Both the Layer-A simulator and the Layer-B serving runtime drive this control
+loop; the phase bodies live once, in `repro.engine.control`, and only the
+meaning of "access" differs (post-LLC memory reference vs KV-block read).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import counting, migration, remap as remap_mod
+from repro.core import counting, migration
 from repro.core.counting import Stage1State, Stage2State
 from repro.core.migration import DramState, MigrationPlan, TimingParams
 from repro.core.remap import RemapState
@@ -35,6 +40,10 @@ class RainbowConfig:
     dram_slots: int = static_field(default=4096)
     write_weight: int = static_field(default=2)
     max_migrations_per_interval: int = static_field(default=512)
+    # Counting backend: "jax" (saturating scatter-adds) or the fused one-pass
+    # kernel under kernels/page_counter ("ref" oracle / "pallas" TPU kernel /
+    # "interpret" Pallas-interpret). All are bit-identical; see engine.control.
+    counter_backend: str = static_field(default="jax")
 
 
 @pytree_dataclass
@@ -47,8 +56,13 @@ class RainbowState:
     threshold: jax.Array  # float32 adaptive admission threshold
     interval: jax.Array  # int32 interval counter
     evictions_last: jax.Array  # int32 bidirectional-traffic monitor
-    migrations_total: jax.Array  # int64 cumulative pages migrated in
-    evictions_total: jax.Array  # int64 cumulative pages evicted
+    # Cumulative totals are int32 DELIBERATELY: JAX disables x64 by default, so
+    # an int64 request would silently produce int32 anyway (with a warning) and
+    # make the scan-carry dtype depend on global config. int32 wraps only after
+    # 2^31 migrated pages (~8 TB of 4 KB traffic) — far beyond any simulated
+    # horizon here. Revisit alongside jax_enable_x64 if that ever changes.
+    migrations_total: jax.Array  # int32 cumulative pages migrated in
+    evictions_total: jax.Array  # int32 cumulative pages evicted
 
 
 class IntervalReport(NamedTuple):
@@ -61,7 +75,25 @@ class IntervalReport(NamedTuple):
     threshold: jax.Array
 
 
+def _control_cfg(cfg: RainbowConfig):
+    # Lazy import: repro.core.__init__ imports this module eagerly, and
+    # engine.control imports repro.core leaf modules — a module-level import
+    # here would cycle on first import of either package.
+    from repro.engine import control
+
+    return control, control.ControlConfig(
+        num_units=cfg.num_superpages,
+        pages_per_unit=cfg.pages_per_sp,
+        top_n=cfg.top_n,
+        max_moves=cfg.max_migrations_per_interval,
+        write_weight=cfg.write_weight,
+        counter_backend=cfg.counter_backend,
+    )
+
+
 def rainbow_init(cfg: RainbowConfig, threshold: float = 0.0) -> RainbowState:
+    from repro.core import remap as remap_mod
+
     return RainbowState(
         s1=counting.stage1_init(cfg.num_superpages),
         s2_reads=counting.stage2_init(cfg.top_n, cfg.pages_per_sp),
@@ -86,113 +118,73 @@ def observe(
 ) -> RainbowState:
     """Record one batch of accesses. Accesses to migrated pages are DRAM-tier hits
     (counted on the slot for Eq. 2); the rest are NVM-tier (stage-1/2 counting)."""
-    in_dram, slot = remap_mod.translate(st.remap, sp, page)
-    nvm_sp = jnp.where(in_dram, -1, sp)
-
-    s1 = counting.stage1_record(st.s1, nvm_sp, is_write, cfg.write_weight)
-    s2r = counting.stage2_record(
-        st.s2_reads, jnp.where(is_write, -1, nvm_sp), page, is_write * 0 > 0, 1
+    control, ctrl = _control_cfg(cfg)
+    s1, s2r, s2w, dram = control.observe_tiers(
+        ctrl, st.s1, st.s2_reads, st.s2_writes, st.dram, st.remap,
+        sp, page, is_write, now,
     )
-    s2w = counting.stage2_record(
-        st.s2_writes, jnp.where(is_write, nvm_sp, -1), page, is_write, 1
-    )
-    dram = migration.dram_record_access(
-        st.dram, jnp.where(in_dram, slot, -1), is_write, now
-    )
-    return RainbowState(
-        s1=s1,
-        s2_reads=s2r,
-        s2_writes=s2w,
-        dram=dram,
-        remap=st.remap,
-        threshold=st.threshold,
-        interval=st.interval,
-        evictions_last=st.evictions_last,
-        migrations_total=st.migrations_total,
-        evictions_total=st.evictions_total,
-    )
+    return dataclasses.replace(st, s1=s1, s2_reads=s2r, s2_writes=s2w, dram=dram)
 
 
 def end_interval(
     cfg: RainbowConfig, st: RainbowState, timing: TimingParams
 ) -> tuple[RainbowState, IntervalReport]:
     """Close the interval: classify hot pages, admit migrations, rotate monitors."""
-    # ---- Hot-page candidates from stage-2 counters (monitored superpages). ----
-    reads = counting.counter_value(st.s2_reads.counts).astype(jnp.float32)
-    writes = counting.counter_value(st.s2_writes.counts).astype(jnp.float32)
-    n, p = reads.shape
-    psn = st.s2_reads.psn  # monitor rows (-1 unused)
-
-    flat_sp = jnp.repeat(psn, p)
-    flat_page = jnp.tile(jnp.arange(p, dtype=jnp.int32), n)
-    flat_r = reads.reshape(-1)
-    flat_w = writes.reshape(-1)
-
-    # Keep the K best candidates to bound the plan size (K = max migrations).
-    k = cfg.max_migrations_per_interval
-    score = migration.migration_benefit(flat_r, flat_w, timing)
-    score = jnp.where(flat_sp >= 0, score, -jnp.inf)
-    # Exclude pages already resident in DRAM.
-    already, _ = remap_mod.translate(
-        st.remap, jnp.maximum(flat_sp, 0), flat_page
+    control, ctrl = _control_cfg(cfg)
+    reads, writes = counting.stage2_split_rw(st.s2_reads, st.s2_writes)
+    out = control.plan_and_apply(
+        ctrl, reads, writes, st.s2_reads.psn,
+        st.remap, st.dram, st.threshold, timing, now=st.interval,
     )
-    score = jnp.where(already & (flat_sp >= 0), -jnp.inf, score)
-    _, top_idx = jax.lax.top_k(score, min(k, score.shape[0]))
-    cand_sp = jnp.where(score[top_idx] > -jnp.inf, flat_sp[top_idx], -1)
-    cand_page = flat_page[top_idx]
-    cand_r = flat_r[top_idx]
-    cand_w = flat_w[top_idx]
+    s1, new_psn, dram = control.rotate_monitors(ctrl, st.s1, out.dram)
 
-    # ---- Utility admission against the slot manager (Eq. 1/2). ----
-    plan = migration.plan_migrations(
-        cand_sp, cand_page, cand_r, cand_w, st.dram, timing, st.threshold
-    )
-    dram = migration.dram_apply_plan(st.dram, plan, cand_sp, cand_page, st.interval)
-
-    # ---- Remap/bitmap maintenance: evict first, then install. ----
-    rm = remap_mod.remap_evict(st.remap, plan.evict_sp, plan.evict_page)
-    rm = remap_mod.remap_install(
-        rm,
-        jnp.where(plan.migrate, cand_sp, -1),
-        cand_page,
-        plan.dst_slot,
-    )
-
-    n_migrated = plan.migrate.sum().astype(jnp.int32)
-    n_evicted = (plan.evict_sp >= 0).sum().astype(jnp.int32)
-    n_dirty = plan.evict_dirty.sum().astype(jnp.int32)
-
-    # ---- Adaptive threshold from bidirectional traffic (§III-C). ----
-    threshold = migration.adapt_threshold(st.threshold, n_evicted)
-
-    # ---- Rotate monitors: next interval watches this interval's top-N. ----
-    new_psn, _ = counting.select_top_n(st.s1, cfg.top_n)
-    new_st = RainbowState(
-        s1=counting.stage1_init(cfg.num_superpages),
+    new_st = dataclasses.replace(
+        st,
+        s1=s1,
         s2_reads=counting.stage2_begin(new_psn, cfg.pages_per_sp),
         s2_writes=counting.stage2_begin(new_psn, cfg.pages_per_sp),
-        dram=migration.dram_new_interval(dram),
-        remap=rm,
-        threshold=threshold,
+        dram=dram,
+        remap=out.remap,
+        threshold=out.threshold,
         interval=st.interval + 1,
-        evictions_last=n_evicted,
-        migrations_total=st.migrations_total + n_migrated.astype(jnp.int32),
-        evictions_total=st.evictions_total + n_evicted.astype(jnp.int32),
+        evictions_last=out.n_evicted,
+        migrations_total=st.migrations_total + out.n_migrated,
+        evictions_total=st.evictions_total + out.n_evicted,
     )
     report = IntervalReport(
-        plan=plan,
-        cand_sp=cand_sp,
-        cand_page=cand_page,
-        n_migrated=n_migrated,
-        n_evicted=n_evicted,
-        n_dirty_evicted=n_dirty,
-        threshold=threshold,
+        plan=out.plan,
+        cand_sp=out.cand_sp,
+        cand_page=out.cand_page,
+        n_migrated=out.n_migrated,
+        n_evicted=out.n_evicted,
+        n_dirty_evicted=out.n_dirty,
+        threshold=out.threshold,
     )
     return new_st, report
+
+
+def interval_step(
+    cfg: RainbowConfig,
+    st: RainbowState,
+    sp: jax.Array,
+    page: jax.Array,
+    is_write: jax.Array,
+    timing: TimingParams,
+) -> tuple[RainbowState, IntervalReport]:
+    """One full monitoring interval (observe batch + end_interval), scannable.
+
+    `jax.lax.scan(lambda st, tr: interval_step(cfg, st, *tr, timing), st, chunks)`
+    runs an entire simulation device-resident — this is the EngineStep used by
+    engine.simloop's rainbow policy program.
+    """
+    st = observe(cfg, st, sp, page, is_write, st.interval)
+    return end_interval(cfg, st, timing)
 
 
 def translate_accesses(
     st: RainbowState, sp: jax.Array, page: jax.Array
 ) -> tuple[jax.Array, jax.Array]:
     """Public vectorized translation (Fig. 6 outcome): (in_fast_tier, slot)."""
+    from repro.core import remap as remap_mod
+
     return remap_mod.translate(st.remap, sp, page)

@@ -1,0 +1,41 @@
+"""Unified device-resident MemoryEngine.
+
+One interval controller (`engine.control`) and one scanned interval loop
+(`engine.simloop`) drive both layers of the reproduction:
+
+  * Layer A — the memory-system simulator (`sim.runner` is a thin host shell
+    over `simloop.MemoryEngine`; `core.rainbow` delegates its observe /
+    end_interval bodies to `control`).
+  * Layer B — the serving runtime (`memory.kvcache.end_interval_promote` plans
+    promotions through the same `control.plan_and_apply`).
+
+Import discipline: `control` only depends on `repro.core` leaf modules and is
+imported eagerly; `simloop` depends on `repro.sim` and is loaded lazily (PEP
+562) so that `repro.sim.__init__` -> `sim.runner` -> engine does not cycle.
+"""
+from __future__ import annotations
+
+from repro.engine.control import (
+    ControlConfig,
+    PlanOutcome,
+    observe_tiers,
+    plan_and_apply,
+    rotate_monitors,
+)
+
+__all__ = [
+    "ControlConfig",
+    "PlanOutcome",
+    "observe_tiers",
+    "plan_and_apply",
+    "rotate_monitors",
+    "simloop",
+]
+
+
+def __getattr__(name):  # lazy: simloop pulls in repro.sim (see module docstring)
+    if name == "simloop":
+        import importlib
+
+        return importlib.import_module("repro.engine.simloop")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

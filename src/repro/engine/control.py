@@ -1,0 +1,226 @@
+"""The interval controller of Rainbow (§III), shared by Layer A and Layer B.
+
+Everything the paper's memory controller + OS do once per monitoring interval is
+expressed here as three pure, jit/scan-compatible phases:
+
+  observe_tiers    : translate a batch of accesses, count the NVM tier with the
+                     two-stage counters (stage-1 superpage + stage-2 read/write
+                     small-page), and record DRAM-tier slot stats for Eq. 2.
+  plan_and_apply   : hot-page candidate extraction from the stage-2 counters,
+                     utility admission (Eq. 1/2) against the free/clean/dirty
+                     slot manager, remap/bitmap evict + install, adaptive
+                     threshold update (§III-C).
+  rotate_monitors  : top-N hot-superpage selection for the next interval and
+                     per-interval counter reset.
+
+Layer A's `core.rainbow.observe/end_interval` and Layer B's
+`memory.kvcache.end_interval_promote` are thin compositions of these phases —
+the control loop exists exactly once. `engine.simloop` fuses the phases into a
+single `lax.scan` step so a whole simulation runs device-resident.
+
+The stage-1/stage-2 counting path has two implementations behind
+``ControlConfig.counter_backend``:
+
+  "jax"                      — saturating scatter-adds (bit-identical baseline)
+  "ref" | "pallas" |
+  "interpret"                — the fused one-pass counting kernel under
+                               kernels/page_counter (ref oracle, Pallas TPU
+                               kernel, or Pallas interpret mode), merged into
+                               the saturating counters. Bit-identical to "jax"
+                               because both reduce the batch in uint32 before
+                               saturating once.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.counting import (
+    Stage1State,
+    Stage2State,
+    saturating_merge,
+    select_top_n,
+    stage1_init,
+    stage1_record,
+    stage2_record_weighted,
+)
+from repro.core.migration import (
+    DramState,
+    MigrationPlan,
+    TimingParams,
+    adapt_threshold,
+    dram_apply_plan,
+    dram_new_interval,
+    dram_record_access,
+    migration_benefit,
+    plan_migrations,
+)
+from repro.core.remap import RemapState, remap_evict, remap_install, translate
+from repro.utils import pytree_dataclass, static_field
+
+
+@pytree_dataclass
+class ControlConfig:
+    """Static geometry of one controller instance.
+
+    Layer A: units = superpages, pages = 4 KB pages. Layer B: units = sequences
+    (superblocks), pages = KV blocks. `max_moves` bounds the per-interval plan
+    size K (fixed shapes under scan).
+    """
+
+    num_units: int = static_field(default=1024)
+    pages_per_unit: int = static_field(default=512)
+    top_n: int = static_field(default=100)
+    max_moves: int = static_field(default=512)
+    write_weight: int = static_field(default=2)
+    counter_backend: str = static_field(default="jax")
+
+
+class PlanOutcome(NamedTuple):
+    """Result of plan_and_apply (per-interval migration decision + new tables)."""
+
+    remap: RemapState
+    dram: DramState
+    threshold: jax.Array
+    plan: MigrationPlan
+    cand_sp: jax.Array
+    cand_page: jax.Array
+    n_migrated: jax.Array  # int32
+    n_evicted: jax.Array  # int32
+    n_dirty: jax.Array  # int32
+
+
+def observe_tiers(
+    cfg: ControlConfig,
+    s1: Stage1State,
+    s2_reads: Stage2State,
+    s2_writes: Stage2State,
+    dram: DramState,
+    remap: RemapState,
+    sp: jax.Array,  # int32[B] unit id per access
+    page: jax.Array,  # int32[B] page within unit
+    is_write: jax.Array,  # bool[B]
+    now: jax.Array,  # int32 logical time (LRU)
+) -> tuple[Stage1State, Stage2State, Stage2State, DramState]:
+    """Record one access batch: NVM-tier two-stage counting + DRAM-tier stats.
+
+    Accesses to migrated pages are DRAM-tier hits (counted on the slot for
+    Eq. 2 victims); the rest feed the stage-1/stage-2 NVM counters.
+    """
+    in_dram, slot = translate(remap, sp, page)
+    nvm_sp = jnp.where(in_dram, -1, sp)
+
+    if cfg.counter_backend == "jax":
+        s1 = stage1_record(s1, nvm_sp, is_write, cfg.write_weight)
+        s2_reads = stage2_record_weighted(
+            s2_reads, nvm_sp, page, (~is_write).astype(jnp.uint32)
+        )
+        s2_writes = stage2_record_weighted(
+            s2_writes, nvm_sp, page, is_write.astype(jnp.uint32)
+        )
+    else:
+        from repro.kernels.page_counter.ops import observe_counts
+
+        h1, h2r, h2w = observe_counts(
+            nvm_sp,
+            page,
+            is_write,
+            s2_reads.psn,
+            cfg.num_units,
+            cfg.pages_per_unit,
+            write_weight=cfg.write_weight,
+            force=cfg.counter_backend,
+        )
+        s1 = Stage1State(counts=saturating_merge(s1.counts, h1))
+        s2_reads = Stage2State(
+            psn=s2_reads.psn, counts=saturating_merge(s2_reads.counts, h2r)
+        )
+        s2_writes = Stage2State(
+            psn=s2_writes.psn, counts=saturating_merge(s2_writes.counts, h2w)
+        )
+
+    dram = dram_record_access(dram, jnp.where(in_dram, slot, -1), is_write, now)
+    return s1, s2_reads, s2_writes, dram
+
+
+def plan_and_apply(
+    cfg: ControlConfig,
+    reads: jax.Array,  # [N, P] effective read counts of monitored units
+    writes: jax.Array,  # [N, P] effective write counts (zeros for Layer B)
+    psn: jax.Array,  # int32[N] monitored unit per row (-1 unused)
+    remap: RemapState,
+    dram: DramState,
+    threshold: jax.Array,
+    timing: TimingParams,
+    now: jax.Array,
+    extra_exclude: jax.Array | None = None,  # bool[N, P] extra candidate mask
+) -> PlanOutcome:
+    """Close the interval's decision: classify hot pages and admit migrations.
+
+    Candidates are the K best (Eq. 1) monitored pages not already resident (and
+    not excluded by `extra_exclude`, e.g. Layer B's beyond-sequence-length
+    blocks); admission runs Eq. 1/2 against the slot manager best-first into
+    victims cheapest-first, then the remap/bitmap tables evict + install.
+    """
+    reads = reads.astype(jnp.float32)
+    writes = writes.astype(jnp.float32)
+    n, p = reads.shape
+
+    flat_sp = jnp.repeat(psn, p)
+    flat_page = jnp.tile(jnp.arange(p, dtype=jnp.int32), n)
+    flat_r = reads.reshape(-1)
+    flat_w = writes.reshape(-1)
+
+    score = migration_benefit(flat_r, flat_w, timing)
+    score = jnp.where(flat_sp >= 0, score, -jnp.inf)
+    # Exclude pages already resident in the performance tier.
+    already, _ = translate(remap, jnp.maximum(flat_sp, 0), flat_page)
+    score = jnp.where(already & (flat_sp >= 0), -jnp.inf, score)
+    if extra_exclude is not None:
+        score = jnp.where(extra_exclude.reshape(-1), -jnp.inf, score)
+
+    k = min(cfg.max_moves, score.shape[0])
+    _, top_idx = jax.lax.top_k(score, k)
+    cand_sp = jnp.where(score[top_idx] > -jnp.inf, flat_sp[top_idx], -1)
+    cand_page = flat_page[top_idx]
+    cand_r = flat_r[top_idx]
+    cand_w = flat_w[top_idx]
+
+    plan = plan_migrations(cand_sp, cand_page, cand_r, cand_w, dram, timing, threshold)
+    dram = dram_apply_plan(dram, plan, cand_sp, cand_page, now)
+
+    rm = remap_evict(remap, plan.evict_sp, plan.evict_page)
+    rm = remap_install(
+        rm, jnp.where(plan.migrate, cand_sp, -1), cand_page, plan.dst_slot
+    )
+
+    n_migrated = plan.migrate.sum().astype(jnp.int32)
+    n_evicted = (plan.evict_sp >= 0).sum().astype(jnp.int32)
+    n_dirty = plan.evict_dirty.sum().astype(jnp.int32)
+    threshold = adapt_threshold(threshold, n_evicted)
+
+    return PlanOutcome(
+        remap=rm,
+        dram=dram,
+        threshold=threshold,
+        plan=plan,
+        cand_sp=cand_sp,
+        cand_page=cand_page,
+        n_migrated=n_migrated,
+        n_evicted=n_evicted,
+        n_dirty=n_dirty,
+    )
+
+
+def rotate_monitors(
+    cfg: ControlConfig, s1: Stage1State, dram: DramState
+) -> tuple[Stage1State, jax.Array, DramState]:
+    """Rotate to the next interval: (fresh stage-1, new monitor set, reset slots).
+
+    The next interval's stage-2 monitors are this interval's stage-1 top-N
+    (history-based, paper step (2)); DRAM per-interval slot stats are zeroed.
+    """
+    new_psn, _ = select_top_n(s1, cfg.top_n)
+    return stage1_init(cfg.num_units), new_psn, dram_new_interval(dram)

@@ -1,0 +1,439 @@
+"""Layer-A MemoryEngine: the whole simulation as ONE device-resident lax.scan.
+
+The eager reference path (sim.policies / sim.runner's `simulate_eager`) steps
+intervals from the host: one `run_interval` dispatch + one policy-migrate
+round-trip per interval. At fleet scale the control loop itself becomes the
+bottleneck (cf. Nomad '24, Memos '17) — so the engine fuses the interval loop:
+
+  EngineStep = residency -> per-access translation scan -> policy migrate
+               (counting + utility admission + remap install/evict) ->
+               TLB shootdowns
+
+and `engine_run` executes `lax.scan(EngineStep)` over pre-generated trace
+chunks, so a full (intervals x accesses) simulation is a single XLA program
+with zero host<->device traffic inside the loop. `sweep_seeds` vmaps the same
+step across seeds for fleet sweeps.
+
+All five §IV-A policies are ported as policy-parameterized step programs:
+
+  flat-static / dram-only : residency is state-free, precomputed per chunk
+  hscc-4kb / hscc-2mb     : fixed-shape JAX ports of the HSCC utility loop
+  rainbow                 : core.rainbow.interval_step (the shared controller)
+
+The engine is bit-identical to the eager path for the state-free policies and
+for rainbow (same ops, same order); the HSCC ports differ only in float dtype
+(f32 vs numpy f64) and sort tie-breaking, which the directional tests tolerate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rainbow as rb
+from repro.core.remap import translate
+from repro.core.tlb import SplitTLB, tlb_invalidate
+from repro.sim import tlbsim
+from repro.sim import trace as trace_mod
+from repro.sim.config import PAGES_PER_SP, MachineConfig
+from repro.sim.policies import machine_timing
+from repro.utils import pytree_dataclass, static_field
+
+#: TranslationKind used by the per-access scan, per policy (§IV-A table).
+POLICY_KINDS = {
+    "flat-static": "flat4k",
+    "hscc-4kb-mig": "flat4k",
+    "hscc-2mb-mig": "sp2m",
+    "rainbow": "rainbow",
+    "dram-only": "sp2m",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """Static configuration of one engine compile (hashable; jit static arg)."""
+
+    policy: str
+    mc: MachineConfig
+    num_superpages: int
+    footprint_pages: int
+    counter_backend: str = "jax"  # rainbow counting: "jax"|"ref"|"pallas"|"interpret"
+    max_invalidate: int = 256  # 4KB-TLB shootdowns applied per interval (eager cap)
+
+
+class TraceChunks(NamedTuple):
+    """Pre-generated device trace: [intervals, accesses] per field.
+
+    `in_dram` carries the state-free residency of flat-static / dram-only
+    (zeros for stateful policies, which derive residency on device).
+    """
+
+    sp: jax.Array  # int32[I, A]
+    page: jax.Array  # int32[I, A]
+    vpn: jax.Array  # int32[I, A]
+    is_write: jax.Array  # bool[I, A]
+    in_dram: jax.Array  # bool[I, A]
+
+
+@pytree_dataclass
+class HsccPolicyState:
+    """DRAM residency of the HSCC ports (per 4KB page or per superpage)."""
+
+    resident: jax.Array  # bool[num_units]
+    dirty: jax.Array  # bool[num_units]
+    slots_used: jax.Array  # int32 (4KB variant; the 2MB port recounts residency)
+
+
+@pytree_dataclass
+class EngineState:
+    sim: tlbsim.SimState
+    pol: Any  # policy-program state (structure is static per EngineSpec)
+
+
+class IntervalStats(NamedTuple):
+    """Per-interval migration activity (host finalize derives bytes/cycles)."""
+
+    migrations: jax.Array  # int32
+    evictions: jax.Array  # int32
+    dirty_evictions: jax.Array  # int32
+    shootdowns: jax.Array  # int32
+
+
+def _zero_stats() -> IntervalStats:
+    z = jnp.zeros((), jnp.int32)
+    return IntervalStats(z, z, z, z)
+
+
+# ---------------------------------------------------------------------------
+# Host-side trace pre-generation (outside the loop; the scan never leaves HBM)
+# ---------------------------------------------------------------------------
+
+
+def make_chunks(
+    app: str,
+    policy: str,
+    mc: MachineConfig,
+    seed: int,
+    intervals: int,
+    accesses: int | None = None,
+) -> tuple[TraceChunks, dict]:
+    """Generate + stack all interval traces for one (app, policy, seed) run."""
+    if policy not in POLICY_KINDS:
+        raise KeyError(
+            f"unknown policy {policy!r}; expected one of {sorted(POLICY_KINDS)}"
+        )
+    traces = [
+        trace_mod.generate(app, seed, i, accesses) for i in range(intervals)
+    ]
+    t0 = traces[0]
+    vpn64 = np.stack([t.vpn for t in traces])
+    wr = np.stack([t.is_write for t in traces])
+    if policy == "flat-static":
+        ratio = mc.dram_bytes / (mc.dram_bytes + mc.nvm_bytes)
+        in_dram = ((vpn64 * 2654435761) % 997) < int(997 * ratio)
+    elif policy == "dram-only":
+        in_dram = np.ones_like(wr)
+    else:
+        in_dram = np.zeros_like(wr)
+    chunks = TraceChunks(
+        sp=jnp.asarray(np.stack([t.sp for t in traces])),
+        page=jnp.asarray(np.stack([t.page for t in traces])),
+        vpn=jnp.asarray(vpn64.astype(np.int32)),
+        is_write=jnp.asarray(wr),
+        in_dram=jnp.asarray(in_dram),
+    )
+    meta = {
+        "num_superpages": int(t0.num_superpages),
+        "footprint_pages": int(t0.footprint_pages),
+        "inst_per_access": float(t0.inst_per_access),
+        "accesses_per_interval": int(t0.sp.shape[0]),
+    }
+    return chunks, meta
+
+
+# ---------------------------------------------------------------------------
+# Shared fixed-shape helpers
+# ---------------------------------------------------------------------------
+
+
+def _first_k_valid(values: jax.Array, valid: jax.Array, k: int) -> jax.Array:
+    """First k `values` whose lane is valid, in lane order; -1 padding."""
+    order = jnp.argsort(~valid, stable=True)
+    vals = jnp.where(valid[order], values[order], -1).astype(jnp.int32)
+    if vals.shape[0] >= k:
+        return vals[:k]
+    return jnp.concatenate([vals, jnp.full((k - vals.shape[0],), -1, jnp.int32)])
+
+
+def _invalidate_4k(sim: tlbsim.SimState, vpns: jax.Array) -> tlbsim.SimState:
+    """Shoot down a fixed-length vpn list in the 4KB split TLB.
+
+    -1 lanes are exact no-ops (they only rewrite already-invalid entries), so
+    this matches the eager Policy._invalidate_4k host loop bit for bit.
+    """
+
+    def body(tlb4: SplitTLB, v):
+        return SplitTLB(
+            l1=tlb_invalidate(tlb4.l1, v), l2=tlb_invalidate(tlb4.l2, v)
+        ), None
+
+    tlb4, _ = jax.lax.scan(body, sim.tlb4, vpns)
+    return sim._replace(tlb4=tlb4)
+
+
+def _histograms(idx: jax.Array, is_write: jax.Array, n: int):
+    reads = jnp.zeros((n,), jnp.float32).at[idx].add(
+        jnp.where(is_write, 0.0, 1.0)
+    )
+    writes = jnp.zeros((n,), jnp.float32).at[idx].add(
+        jnp.where(is_write, 1.0, 0.0)
+    )
+    return reads, writes
+
+
+# ---------------------------------------------------------------------------
+# Policy programs: init / residency / migrate
+# ---------------------------------------------------------------------------
+
+
+def _rainbow_cfg(spec: EngineSpec) -> rb.RainbowConfig:
+    return rb.RainbowConfig(
+        num_superpages=spec.num_superpages,
+        pages_per_sp=PAGES_PER_SP,
+        top_n=spec.mc.top_n,
+        dram_slots=spec.mc.dram_pages,
+        write_weight=spec.mc.write_weight,
+        max_migrations_per_interval=512,
+        counter_backend=spec.counter_backend,
+    )
+
+
+def engine_init(spec: EngineSpec) -> EngineState:
+    sim = tlbsim.init_state(spec.mc)
+    if spec.policy == "rainbow":
+        pol: Any = rb.rainbow_init(_rainbow_cfg(spec), threshold=spec.mc.mig_threshold)
+    elif spec.policy == "hscc-4kb-mig":
+        pol = HsccPolicyState(
+            resident=jnp.zeros((spec.footprint_pages,), bool),
+            dirty=jnp.zeros((spec.footprint_pages,), bool),
+            slots_used=jnp.zeros((), jnp.int32),
+        )
+    elif spec.policy == "hscc-2mb-mig":
+        pol = HsccPolicyState(
+            resident=jnp.zeros((spec.num_superpages,), bool),
+            dirty=jnp.zeros((spec.num_superpages,), bool),
+            slots_used=jnp.zeros((), jnp.int32),
+        )
+    else:  # flat-static / dram-only: state-free
+        pol = None
+    return EngineState(sim=sim, pol=pol)
+
+
+def _rainbow_migrate(spec: EngineSpec, pol, chunk):
+    cfg = _rainbow_cfg(spec)
+    pol, rep = rb.interval_step(
+        cfg, pol, chunk.sp, chunk.page, chunk.is_write, machine_timing(spec.mc)
+    )
+    # NVM->DRAM migration needs NO shootdown (superpage mapping unchanged);
+    # only DRAM->NVM writeback shoots down the 4KB entries (paper §III-F).
+    ev_valid = rep.plan.evict_sp >= 0
+    ev_vpn = rep.plan.evict_sp * PAGES_PER_SP + rep.plan.evict_page
+    inval = _first_k_valid(ev_vpn, ev_valid, spec.max_invalidate)
+    stats = IntervalStats(
+        migrations=rep.n_migrated,
+        evictions=rep.n_evicted,
+        dirty_evictions=rep.n_dirty_evicted,
+        shootdowns=rep.n_evicted,
+    )
+    return pol, stats, inval
+
+
+def _hscc_admit(
+    mc: MachineConfig,
+    resident: jax.Array,
+    dirty: jax.Array,
+    reads: jax.Array,
+    writes: jax.Array,
+    free: jax.Array,
+    cand_k: int,
+    unit_mig_cost: float,
+    unit_writeback: float,
+):
+    """Fixed-shape HSCC admission: free slots best-first, then swap vs coldest.
+
+    Faithful port of Hscc4K/Hscc2M.migrate: candidates are the top-`cand_k`
+    non-resident units by Eq. 1 benefit above the threshold; the first `free`
+    fill free slots, the rest are paired rank-for-rank with the coldest
+    residents and admitted when the (double-counted, as in the reference)
+    swap gain clears the threshold.
+    """
+    n = resident.shape[0]
+    benefit = (
+        (mc.t_nr - mc.t_dr) * reads + (mc.t_nw - mc.t_dw) * writes - unit_mig_cost
+    )
+    benefit = jnp.where(resident, -jnp.inf, benefit)
+    k = min(cand_k, n)
+    b_top, cand = jax.lax.top_k(benefit, k)
+    ok = b_top > mc.mig_threshold
+
+    rank = jnp.cumsum(ok.astype(jnp.int32)) - 1  # rank among admitted lanes
+    admit_free = ok & (rank < free)
+    resident = resident.at[jnp.where(admit_free, cand, n)].set(True, mode="drop")
+    n_free = admit_free.sum().astype(jnp.int32)
+
+    # Swap path: pair overflow candidates with the coldest residents
+    # (residency measured after the free admissions, as in the reference).
+    rest = ok & (rank >= free)
+    rrank = jnp.clip(rank - free, 0, k - 1)
+    hotness = reads + writes
+    cold_score = jnp.where(resident, hotness, jnp.inf)
+    _, victims = jax.lax.top_k(-cold_score, k)
+    vic = victims[rrank]
+    vic_ok = resident[vic] & rest
+    gain_out = (mc.t_nr - mc.t_dr) * reads[vic] + (mc.t_nw - mc.t_dw) * writes[vic]
+    wb = jnp.where(dirty[vic], unit_writeback, 0.0)
+    ok2 = vic_ok & (b_top - gain_out - unit_mig_cost - wb > mc.mig_threshold)
+
+    resident = resident.at[jnp.where(ok2, vic, n)].set(False, mode="drop")
+    resident = resident.at[jnp.where(ok2, cand, n)].set(True, mode="drop")
+    dirty_ev = (ok2 & dirty[vic]).sum().astype(jnp.int32)
+    dirty = dirty.at[jnp.where(ok2, vic, n)].set(False, mode="drop")
+
+    n_swap = ok2.sum().astype(jnp.int32)
+    stats = IntervalStats(
+        migrations=n_free + n_swap,
+        evictions=n_swap,
+        dirty_evictions=dirty_ev,
+        shootdowns=n_free + 2 * n_swap,
+    )
+    return resident, dirty, n_free, stats, cand, ok
+
+
+def _hscc4k_migrate(spec: EngineSpec, pol: HsccPolicyState, chunk):
+    mc, fp = spec.mc, spec.footprint_pages
+    vpn = jnp.minimum(chunk.vpn, fp - 1)
+    reads, writes = _histograms(vpn, chunk.is_write, fp)
+    dirty = pol.dirty | (pol.resident & (writes > 0))
+    free = jnp.maximum(mc.dram_pages - pol.slots_used, 0)
+    resident, dirty, n_free, stats, cand, ok = _hscc_admit(
+        mc, pol.resident, dirty, reads, writes, free,
+        cand_k=512, unit_mig_cost=mc.mig_page_cost,
+        unit_writeback=mc.writeback_page_cost,
+    )
+    pol = HsccPolicyState(
+        resident=resident, dirty=dirty, slots_used=pol.slots_used + n_free
+    )
+    inval = _first_k_valid(cand, ok, 64)  # eager: _invalidate_4k(cand[:64])
+    return pol, stats, inval
+
+
+def _hscc2m_migrate(spec: EngineSpec, pol: HsccPolicyState, chunk):
+    mc, nsp = spec.mc, spec.num_superpages
+    reads, writes = _histograms(chunk.sp, chunk.is_write, nsp)
+    dirty = pol.dirty | (pol.resident & (writes > 0))
+    free = jnp.maximum(mc.dram_superpages - pol.resident.sum().astype(jnp.int32), 0)
+    resident, dirty, _, stats, _, _ = _hscc_admit(
+        mc, pol.resident, dirty, reads, writes, free,
+        cand_k=64, unit_mig_cost=mc.mig_page_cost * PAGES_PER_SP,
+        unit_writeback=mc.writeback_page_cost * PAGES_PER_SP,
+    )
+    return HsccPolicyState(resident=resident, dirty=dirty, slots_used=pol.slots_used), stats, None
+
+
+# ---------------------------------------------------------------------------
+# EngineStep + scanned run
+# ---------------------------------------------------------------------------
+
+
+def engine_step(
+    spec: EngineSpec, state: EngineState, chunk: TraceChunks
+) -> tuple[EngineState, IntervalStats]:
+    """One interval, device-resident: residency -> access scan -> migrate."""
+    policy = spec.policy
+    if policy == "rainbow":
+        in_dram, _ = translate(state.pol.remap, chunk.sp, chunk.page)
+    elif policy == "hscc-4kb-mig":
+        in_dram = state.pol.resident[
+            jnp.minimum(chunk.vpn, spec.footprint_pages - 1)
+        ]
+    elif policy == "hscc-2mb-mig":
+        in_dram = state.pol.resident[chunk.sp]
+    else:
+        in_dram = chunk.in_dram
+
+    step = tlbsim.make_access_step(POLICY_KINDS[policy], spec.mc)
+    sim, _ = jax.lax.scan(
+        step, state.sim, (chunk.vpn, chunk.sp, in_dram, chunk.is_write)
+    )
+
+    inval = None
+    if policy == "rainbow":
+        pol, stats, inval = _rainbow_migrate(spec, state.pol, chunk)
+    elif policy == "hscc-4kb-mig":
+        pol, stats, inval = _hscc4k_migrate(spec, state.pol, chunk)
+    elif policy == "hscc-2mb-mig":
+        pol, stats, _ = _hscc2m_migrate(spec, state.pol, chunk)
+    else:
+        pol, stats = state.pol, _zero_stats()
+    if inval is not None:
+        sim = _invalidate_4k(sim, inval)
+    return EngineState(sim=sim, pol=pol), stats
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def engine_run(
+    spec: EngineSpec, state: EngineState, chunks: TraceChunks
+) -> tuple[EngineState, IntervalStats]:
+    """The whole simulation as one lax.scan over interval chunks."""
+    return jax.lax.scan(
+        lambda st, ch: engine_step(spec, st, ch), state, chunks
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def engine_run_batch(
+    spec: EngineSpec, states: EngineState, chunks: TraceChunks
+) -> tuple[EngineState, IntervalStats]:
+    """vmap of engine_run over a leading batch dim (fleet sweeps over seeds)."""
+    return jax.vmap(
+        lambda st, ch: jax.lax.scan(lambda s, c: engine_step(spec, s, c), st, ch)
+    )(states, chunks)
+
+
+def sweep_seeds(
+    app: str,
+    policy: str,
+    mc: MachineConfig,
+    seeds: list[int],
+    intervals: int = 5,
+    accesses: int | None = None,
+    counter_backend: str = "jax",
+) -> tuple[EngineState, IntervalStats, dict]:
+    """Run one (app, policy) across a seed fleet in a single batched compile.
+
+    Returns (final states, per-interval stats [S, I], meta). Apps/policies
+    change array shapes and scan structure, so the host shell loops over them
+    and vmaps the homogeneous axis (seeds) here.
+    """
+    chunk_list, meta = zip(
+        *(make_chunks(app, policy, mc, s, intervals, accesses) for s in seeds)
+    )
+    chunks = jax.tree.map(lambda *xs: jnp.stack(xs), *chunk_list)
+    meta0 = meta[0]
+    spec = EngineSpec(
+        policy=policy,
+        mc=mc,
+        num_superpages=meta0["num_superpages"],
+        footprint_pages=meta0["footprint_pages"],
+        counter_backend=counter_backend,
+    )
+    state0 = engine_init(spec)
+    states = jax.tree.map(
+        lambda x: jnp.stack([x] * len(seeds)), state0
+    )
+    finals, stats = engine_run_batch(spec, states, chunks)
+    return finals, stats, meta0

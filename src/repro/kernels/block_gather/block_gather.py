@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import TPUCompilerParams
+
 
 def _kernel(src_ref, dst_ref, cap_ref, hot_in_ref, hot_out_ref):
     del hot_in_ref  # present only for the input/output alias
@@ -57,6 +59,6 @@ def block_gather(
         out_shape=jax.ShapeDtypeStruct(hot_padded.shape, hot.dtype),
         interpret=interpret,
         input_output_aliases={3: 0},  # hot_padded -> out (untouched rows keep)
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("arbitrary",)),
+        compiler_params=TPUCompilerParams(dimension_semantics=("arbitrary",)),
     )(src_safe, dst_safe, cap, hot_padded)
     return out[:nhot]

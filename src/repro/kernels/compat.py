@@ -1,0 +1,12 @@
+"""Pallas API compatibility shims.
+
+`pltpu.TPUCompilerParams` was renamed to `pltpu.CompilerParams` across JAX
+releases; resolve whichever this JAX provides so the kernels run on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+TPUCompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)

@@ -16,6 +16,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import TPUCompilerParams
+
 NEG_INF = -2.0e38
 
 
@@ -95,7 +97,7 @@ def flash_attention(
             pltpu.VMEM((bq, hd), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
         ),
     )(q, k, v)

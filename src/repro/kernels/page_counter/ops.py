@@ -20,3 +20,29 @@ def count_accesses(
     return two_stage_count_ref(
         sp, page, weight, num_superpages, monitored, pages_per_sp
     )
+
+
+def observe_counts(
+    sp, page, is_write, monitored, num_superpages, pages_per_sp,
+    write_weight=2, force=None,
+):
+    """Fused one-pass observe histograms: (s1, s2_reads, s2_writes).
+
+    The MemoryEngine's counting step (engine.control.observe_tiers) dispatches
+    here when `counter_backend` != "jax": "pallas" on TPU, "interpret" for the
+    Pallas interpreter, "ref" for the pure-jnp oracle.
+    """
+    from repro.kernels.page_counter.page_counter import fused_observe_count
+    from repro.kernels.page_counter.ref import fused_observe_count_ref
+
+    backend = jax.default_backend()
+    mode = force or ("pallas" if backend == "tpu" else "ref")
+    if mode in ("pallas", "interpret"):
+        return fused_observe_count(
+            sp, page, is_write, monitored, num_superpages, pages_per_sp,
+            write_weight=write_weight, interpret=(mode == "interpret"),
+        )
+    return fused_observe_count_ref(
+        sp, page, is_write, monitored, num_superpages, pages_per_sp,
+        write_weight=write_weight,
+    )

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import TPUCompilerParams
+
 
 def _kernel(
     monitored_ref,  # int32[N] (SMEM, scalar-prefetch)
@@ -120,7 +122,7 @@ def two_stage_count(
             jax.ShapeDtypeStruct((n_mon, pages_per_sp), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("arbitrary",)),
+        compiler_params=TPUCompilerParams(dimension_semantics=("arbitrary",)),
     )(
         monitored.astype(jnp.int32),
         sp.reshape(tiles, a_tile),
@@ -128,3 +130,144 @@ def two_stage_count(
         weight.astype(jnp.float32).reshape(tiles, a_tile),
     )
     return s1.astype(jnp.uint32), s2.astype(jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Fused observe kernel: stage-1 (weighted) + stage-2 read/write histograms in
+# ONE pass over an access batch — the counting step of engine.control's
+# observe_tiers. Three counter tables ride in VMEM scratch across the grid and
+# flush on the last tile, so each access element is read exactly once.
+# ---------------------------------------------------------------------------
+
+
+def _fused_kernel(
+    monitored_ref,  # int32[N] (SMEM, scalar-prefetch)
+    sp_ref,  # int32[1, A_TILE]
+    page_ref,  # int32[1, A_TILE]
+    wr_ref,  # int32[1, A_TILE] is_write as 0/1
+    s1_out,  # f32[NSP]
+    s2r_out,  # f32[N, PAGES]
+    s2w_out,  # f32[N, PAGES]
+    s1_acc,  # scratch f32[NSP]
+    s2r_acc,  # scratch f32[N, PAGES]
+    s2w_acc,  # scratch f32[N, PAGES]
+    *,
+    nsp: int,
+    pages: int,
+    write_weight: int,
+    tiles: int,
+):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        s1_acc[...] = jnp.zeros_like(s1_acc)
+        s2r_acc[...] = jnp.zeros_like(s2r_acc)
+        s2w_acc[...] = jnp.zeros_like(s2w_acc)
+
+    sp = sp_ref[0]
+    page = page_ref[0]
+    is_write = wr_ref[0] > 0
+    valid = sp >= 0
+
+    # per-lane weights: stage-1 counts writes heavier (§III-B); stage-2 keeps
+    # reads and writes in separate tables for the Eq. 1 utility split.
+    w1 = jnp.where(valid, jnp.where(is_write, float(write_weight), 1.0), 0.0)
+    w_r = jnp.where(valid & ~is_write, 1.0, 0.0)
+    w_w = jnp.where(valid & is_write, 1.0, 0.0)
+
+    # stage 1: histogram over superpages via one-hot matmul
+    onehot = (sp[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, nsp), 1)).astype(
+        jnp.float32
+    )  # [A, NSP]
+    s1_acc[...] += jnp.einsum("an,a->n", onehot, w1)
+
+    # stage 2: monitored rows only, read/write split
+    mon = monitored_ref[...]  # [N]
+    row_eq = ((sp[:, None] == mon[None, :]) & (mon >= 0)[None, :]).astype(
+        jnp.float32
+    )  # [A, N]
+    page_oh = (
+        page[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, pages), 1)
+    ).astype(jnp.float32)  # [A, PAGES]
+    s2r_acc[...] += jnp.einsum("an,ap->np", row_eq * w_r[:, None], page_oh)
+    s2w_acc[...] += jnp.einsum("an,ap->np", row_eq * w_w[:, None], page_oh)
+
+    @pl.when(t == tiles - 1)
+    def _flush():
+        s1_out[...] = s1_acc[...]
+        s2r_out[...] = s2r_acc[...]
+        s2w_out[...] = s2w_acc[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "num_superpages", "pages_per_sp", "write_weight", "a_tile", "interpret",
+    ),
+)
+def fused_observe_count(
+    sp: jax.Array,  # int32[A] superpage per access (-1 = skip)
+    page: jax.Array,  # int32[A]
+    is_write: jax.Array,  # bool[A]
+    monitored: jax.Array,  # int32[N] monitored superpage ids (-1 = unused row)
+    num_superpages: int,
+    pages_per_sp: int,
+    write_weight: int = 2,
+    a_tile: int = 512,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-pass batch histograms: (s1 u32[NSP], s2_reads, s2_writes u32[N, P])."""
+    a = sp.shape[0]
+    tiles = (a + a_tile - 1) // a_tile
+    pad = tiles * a_tile - a
+    wr = is_write.astype(jnp.int32)
+    if pad:
+        sp = jnp.pad(sp, (0, pad), constant_values=-1)
+        page = jnp.pad(page, (0, pad))
+        wr = jnp.pad(wr, (0, pad))
+    n_mon = monitored.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((1, a_tile), lambda t, mon: (t, 0)),
+            pl.BlockSpec((1, a_tile), lambda t, mon: (t, 0)),
+            pl.BlockSpec((1, a_tile), lambda t, mon: (t, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((num_superpages,), lambda t, mon: (0,)),
+            pl.BlockSpec((n_mon, pages_per_sp), lambda t, mon: (0, 0)),
+            pl.BlockSpec((n_mon, pages_per_sp), lambda t, mon: (0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((num_superpages,), jnp.float32),
+            pltpu.VMEM((n_mon, pages_per_sp), jnp.float32),
+            pltpu.VMEM((n_mon, pages_per_sp), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _fused_kernel,
+        nsp=num_superpages,
+        pages=pages_per_sp,
+        write_weight=write_weight,
+        tiles=tiles,
+    )
+    s1, s2r, s2w = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((num_superpages,), jnp.float32),
+            jax.ShapeDtypeStruct((n_mon, pages_per_sp), jnp.float32),
+            jax.ShapeDtypeStruct((n_mon, pages_per_sp), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=TPUCompilerParams(dimension_semantics=("arbitrary",)),
+    )(
+        monitored.astype(jnp.int32),
+        sp.reshape(tiles, a_tile),
+        page.reshape(tiles, a_tile),
+        wr.reshape(tiles, a_tile),
+    )
+    return s1.astype(jnp.uint32), s2r.astype(jnp.uint32), s2w.astype(jnp.uint32)

@@ -28,3 +28,36 @@ def two_stage_count_ref(
         jnp.where(hit, row * pages_per_sp + page, 0)
     ].add(jnp.where(hit, w, 0))
     return s1, flat.reshape(n, pages_per_sp)
+
+
+def fused_observe_count_ref(
+    sp: jax.Array,  # int32[A] superpage per access (-1 = skip)
+    page: jax.Array,  # int32[A] page within superpage
+    is_write: jax.Array,  # bool[A]
+    monitored: jax.Array,  # int32[N] monitored superpage ids (-1 = unused row)
+    num_superpages: int,
+    pages_per_sp: int,
+    write_weight: int = 2,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for the fused observe kernel.
+
+    Returns (stage1 uint32[NSP] weighted by write_weight, stage2-read and
+    stage2-write uint32[N, pages_per_sp] histograms of the monitored rows).
+    """
+    valid = sp >= 0
+    w1 = jnp.where(valid, jnp.where(is_write, write_weight, 1), 0).astype(jnp.uint32)
+    s1 = jnp.zeros((num_superpages,), jnp.uint32).at[jnp.where(valid, sp, 0)].add(w1)
+
+    eq = (sp[:, None] == monitored[None, :]) & (monitored >= 0)[None, :]
+    row = jnp.argmax(eq, axis=1)
+    hit = eq.any(axis=1)
+    n = monitored.shape[0]
+    idx = jnp.where(hit, row * pages_per_sp + page, 0)
+
+    def hist(w):
+        flat = jnp.zeros((n * pages_per_sp,), jnp.uint32).at[idx].add(
+            jnp.where(hit, w, 0).astype(jnp.uint32)
+        )
+        return flat.reshape(n, pages_per_sp)
+
+    return s1, hist(~is_write), hist(is_write)

@@ -22,6 +22,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import TPUCompilerParams
+
 NEG_INF = -2.0e38
 
 
@@ -126,7 +128,7 @@ def rainbow_attention(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hp, hd), q.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=TPUCompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
     )(vidx, jnp.reshape(length, (1,)).astype(jnp.int32), q, pool_k, pool_v)

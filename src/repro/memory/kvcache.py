@@ -25,7 +25,7 @@ import jax.numpy as jnp
 
 from repro.core import counting, migration
 from repro.core.migration import TimingParams, make_timing
-from repro.core.remap import RemapState, remap_evict, remap_init, remap_install, translate
+from repro.core.remap import RemapState, remap_init, translate
 from repro.utils import pytree_dataclass, static_field
 
 
@@ -256,33 +256,23 @@ def observe_block_mass(
 
     mass: float32[B, blocks_per_seq] — summed softmax mass per KV block
     (aggregated over layers/heads by the caller). Quantized to integer counts
-    for the paper's 15-bit counters.
+    for the paper's 15-bit counters; the floor of 1 keeps every monitored
+    block's counter warm. NOTE: this deliberately CHANGES the pre-refactor
+    accounting, which computed the extra weight as uint32 `(q - 1).clip(0)` —
+    at q = 0 that underflows to 2^32-1 and saturated zero-mass blocks straight
+    to "definitely hot", letting cold blocks win promotions. max(q, 1) is the
+    intended semantics.
     """
     b, nblk = mass.shape
     q = jnp.clip((mass * 64.0), 0, 1024).astype(jnp.uint32)
     seq_ids = jnp.arange(b, dtype=jnp.int32)
-    s1 = counting.Stage1State(
-        counts=counting._saturating_add_u16(
-            kv.s1.counts, seq_ids, q.sum(axis=1)
-        )
-    )
-    # stage 2: only monitored superblocks count at block grain
+    s1 = counting.stage1_record_weighted(kv.s1, seq_ids, q.sum(axis=1))
+    # stage 2: only monitored superblocks count at block grain, mass-weighted
     flat_sp = seq_ids[:, None].repeat(nblk, 1).reshape(-1)
     flat_pg = jnp.arange(nblk, dtype=jnp.int32)[None].repeat(b, 0).reshape(-1)
-    s2 = counting.stage2_record(
-        kv.s2, flat_sp, flat_pg, jnp.zeros_like(flat_sp, bool), 1
+    s2 = counting.stage2_record_weighted(
+        kv.s2, flat_sp, flat_pg, jnp.maximum(q.reshape(-1), 1)
     )
-    # weight the record by quantized mass: re-add (q-1) where q>1
-    # (stage2_record adds 1 per lane; cheaper than a custom weighted path)
-    extra = (q.reshape(-1) - 1).clip(0)
-    slot = counting._psn_to_slot(kv.s2.psn, flat_sp)
-    valid = slot >= 0
-    n, p = s2.counts.shape
-    fidx = jnp.where(valid, slot * p + flat_pg, 0)
-    flat = counting._saturating_add_u16(
-        s2.counts.reshape(-1), fidx, jnp.where(valid, extra, 0)
-    )
-    s2 = counting.Stage2State(psn=s2.psn, counts=flat.reshape(n, p))
     return _replace(kv, s1=s1, s2=s2, step_in_interval=kv.step_in_interval + 1)
 
 
@@ -290,35 +280,36 @@ def end_interval_promote(
     kv: RainbowKV, pcfg: PagedConfig, timing: TimingParams | None = None
 ) -> tuple[RainbowKV, dict]:
     """Close the interval: pick hot blocks (two-stage), admit into the hot pool
-    (utility test), copy block payloads, update remap. Mirrors rainbow.end_interval
-    with the block-copy step materialized on the KV pools."""
+    (utility test), copy block payloads, update remap.
+
+    Layer B's end-interval IS the engine controller: candidate extraction,
+    Eq. 1/2 admission, remap evict+install, threshold adaptation, and monitor
+    rotation all run through repro.engine.control (the same code Layer A's
+    rainbow.end_interval composes); only the block payload copy onto the KV
+    pools is serving-specific.
+    """
+    from repro.engine import control
+
     timing = timing or default_timing()
     b = kv.s1.counts.shape[0]
-    reads = counting.counter_value(kv.s2.counts).astype(jnp.float32)
-    n, p = reads.shape
-    flat_sp = jnp.repeat(kv.s2.psn, p)
-    flat_pg = jnp.tile(jnp.arange(p, dtype=jnp.int32), n)
-    flat_r = reads.reshape(-1)
-
-    k = pcfg.max_promotions
-    score = migration.migration_benefit(flat_r, jnp.zeros_like(flat_r), timing)
-    score = jnp.where(flat_sp >= 0, score, -jnp.inf)
-    already, _ = translate(kv.remap, jnp.maximum(flat_sp, 0), flat_pg)
-    # also never promote blocks beyond the current length
-    in_range = flat_pg <= (kv.length // pcfg.block_size)
-    score = jnp.where(already | ~in_range, -jnp.inf, score)
-    _, top_idx = jax.lax.top_k(score, min(k, score.shape[0]))
-    cand_sp = jnp.where(score[top_idx] > -jnp.inf, flat_sp[top_idx], -1)
-    cand_pg = flat_pg[top_idx]
-    cand_r = flat_r[top_idx]
-
-    plan = migration.plan_migrations(
-        cand_sp, cand_pg, cand_r, jnp.zeros_like(cand_r),
-        kv.dram, timing, kv.threshold,
+    ctrl = control.ControlConfig(
+        num_units=b,
+        pages_per_unit=pcfg.blocks_per_seq,
+        top_n=pcfg.top_n,
+        max_moves=pcfg.max_promotions,
     )
-    dram = migration.dram_apply_plan(kv.dram, plan, cand_sp, cand_pg, jnp.int32(0))
-    rm = remap_evict(kv.remap, plan.evict_sp, plan.evict_page)
-    rm = remap_install(rm, jnp.where(plan.migrate, cand_sp, -1), cand_pg, plan.dst_slot)
+    reads = counting.counter_value(kv.s2.counts)
+    # never promote blocks beyond the current sequence length
+    out_of_range = (
+        jnp.arange(pcfg.blocks_per_seq, dtype=jnp.int32)[None, :]
+        > (kv.length // pcfg.block_size)
+    )
+    out = control.plan_and_apply(
+        ctrl, reads, jnp.zeros_like(reads), kv.s2.psn,
+        kv.remap, kv.dram, kv.threshold, timing, now=jnp.int32(0),
+        extra_exclude=jnp.broadcast_to(out_of_range, reads.shape),
+    )
+    plan, cand_sp, cand_pg = out.plan, out.cand_sp, out.cand_page
 
     # ---- block payload copies (the block_gather kernel's reference path) ----
     src = jnp.where(
@@ -331,16 +322,14 @@ def end_interval_promote(
     hot_k = kv.hot_k.at[:, dst].set(gathered_k, mode="drop")
     hot_v = kv.hot_v.at[:, dst].set(gathered_v, mode="drop")
 
-    n_migrated = plan.migrate.sum()
-    threshold = migration.adapt_threshold(kv.threshold, (plan.evict_sp >= 0).sum())
-    new_psn, _ = counting.select_top_n(kv.s1, pcfg.top_n)
+    s1, new_psn, dram = control.rotate_monitors(ctrl, kv.s1, out.dram)
     new = _replace(
         kv,
-        hot_k=hot_k, hot_v=hot_v, remap=rm, dram=migration.dram_new_interval(dram),
-        s1=counting.stage1_init(b),
+        hot_k=hot_k, hot_v=hot_v, remap=out.remap, dram=dram,
+        s1=s1,
         s2=counting.stage2_begin(new_psn, pcfg.blocks_per_seq),
-        threshold=threshold,
+        threshold=out.threshold,
         step_in_interval=jnp.zeros((), jnp.int32),
     )
-    return new, {"promoted": n_migrated, "evicted": (plan.evict_sp >= 0).sum(),
+    return new, {"promoted": out.n_migrated, "evicted": out.n_evicted,
                  "plan": plan, "cand_sp": cand_sp, "cand_pg": cand_pg}

@@ -12,6 +12,11 @@ Read modes:
 Each decode step records per-block attention mass (the access stream of the
 paper's memory controller); every `interval_steps`, end_interval_promote() runs
 two-stage classification + utility admission and copies hot blocks.
+
+The interval control loop here is the SAME engine as Layer A's simulator:
+observe_block_mass feeds the shared weighted stage-1/2 counters and
+end_interval_promote plans through repro.engine.control.plan_and_apply — only
+the access semantics (attention mass) and the payload copy differ.
 """
 from __future__ import annotations
 

@@ -45,6 +45,54 @@ class IntervalResult:
     clflush_cycles: float = 0.0
 
 
+def interval_costs(
+    policy: str, mc: MachineConfig, migrations: int, evictions: int,
+    dirty: int, shootdowns: int,
+) -> dict[str, float]:
+    """Per-interval traffic/cycle costs derived from migration counts.
+
+    THE single source of each policy's cost model: the eager policies build
+    their IntervalResult from it and the engine path (sim.runner) accumulates
+    the same floats from the scanned per-interval counts.
+    """
+    if policy in ("flat-static", "dram-only"):
+        return {"mig_bytes": 0.0, "mig_cycles": 0.0,
+                "shootdown_cycles": 0.0, "clflush_cycles": 0.0}
+    if policy == "hscc-4kb-mig":
+        moved = migrations + evictions
+        return {
+            "mig_bytes": moved * 4096.0,
+            "mig_cycles": moved * mc.mig_page_cost
+            + dirty * mc.writeback_page_cost,
+            "shootdown_cycles": shootdowns * mc.shootdown_cost,
+            "clflush_cycles": moved * (4096 / mc.line_bytes) * mc.clflush_per_line,
+        }
+    if policy == "hscc-2mb-mig":
+        moved = migrations + evictions
+        sp_mig_cost = mc.mig_page_cost * PAGES_PER_SP
+        return {
+            "mig_bytes": moved * float(PAGES_PER_SP * 4096),
+            "mig_cycles": moved * sp_mig_cost
+            + dirty * mc.writeback_page_cost * PAGES_PER_SP,
+            "shootdown_cycles": shootdowns * mc.shootdown_cost,
+            "clflush_cycles": moved
+            * (PAGES_PER_SP * 4096 / mc.line_bytes)
+            * mc.clflush_per_line,
+        }
+    if policy == "rainbow":
+        # clean evictions write back only the 8-byte remap pointer (§III-E)
+        moved = migrations + evictions
+        return {
+            "mig_bytes": migrations * 4096.0 + dirty * 4096.0
+            + (evictions - dirty) * 8.0,
+            "mig_cycles": migrations * mc.mig_page_cost
+            + dirty * mc.writeback_page_cost,
+            "shootdown_cycles": shootdowns * mc.shootdown_cost,
+            "clflush_cycles": moved * (4096 / mc.line_bytes) * mc.clflush_per_line,
+        }
+    raise KeyError(f"unknown policy {policy!r}")
+
+
 class Policy:
     name = "base"
     kind = "flat4k"
@@ -185,18 +233,14 @@ class Hscc4K(Policy):
         # every migration / eviction remaps a page -> shootdown + clflush
         shootdowns = migrations + evictions
         self._invalidate_4k(cand[:64])
-        pages_moved = migrations + evictions
         return IntervalResult(
             counters=tlbsim.zero_counters(),
             migrations=migrations,
             evictions=evictions,
             dirty_evictions=dirty_ev,
             shootdowns=shootdowns,
-            mig_bytes=pages_moved * 4096.0,
-            mig_cycles=pages_moved * mc.mig_page_cost
-            + dirty_ev * mc.writeback_page_cost,
-            shootdown_cycles=shootdowns * mc.shootdown_cost,
-            clflush_cycles=pages_moved * (4096 / mc.line_bytes) * mc.clflush_per_line,
+            **interval_costs(self.name, mc, migrations, evictions, dirty_ev,
+                             shootdowns),
         )
 
 
@@ -255,20 +299,14 @@ class Hscc2M(Policy):
             migrations += len(incoming)
 
         shootdowns = migrations + evictions
-        sp_moved = migrations + evictions
         return IntervalResult(
             counters=tlbsim.zero_counters(),
             migrations=migrations,
             evictions=evictions,
             dirty_evictions=dirty_ev,
             shootdowns=shootdowns,
-            mig_bytes=sp_moved * float(PAGES_PER_SP * 4096),
-            mig_cycles=sp_moved * sp_mig_cost
-            + dirty_ev * mc.writeback_page_cost * PAGES_PER_SP,
-            shootdown_cycles=shootdowns * mc.shootdown_cost,
-            clflush_cycles=sp_moved
-            * (PAGES_PER_SP * 4096 / mc.line_bytes)
-            * mc.clflush_per_line,
+            **interval_costs(self.name, mc, migrations, evictions, dirty_ev,
+                             shootdowns),
         )
 
 
@@ -317,19 +355,14 @@ class Rainbow(Policy):
         evp = np.asarray(rep.plan.evict_page)
         evicted_vpn = (ev[ev >= 0].astype(np.int64) * PAGES_PER_SP + evp[ev >= 0])
         self._invalidate_4k(evicted_vpn.astype(np.int32))
-        pages_moved = migrations + evictions
-        # clean evictions write back only the 8-byte remap pointer (§III-E)
         return IntervalResult(
             counters=tlbsim.zero_counters(),
             migrations=migrations,
             evictions=evictions,
             dirty_evictions=dirty_ev,
             shootdowns=shootdowns,
-            mig_bytes=migrations * 4096.0 + dirty_ev * 4096.0 + (evictions - dirty_ev) * 8.0,
-            mig_cycles=migrations * mc.mig_page_cost
-            + dirty_ev * mc.writeback_page_cost,
-            shootdown_cycles=shootdowns * mc.shootdown_cost,
-            clflush_cycles=pages_moved * (4096 / mc.line_bytes) * mc.clflush_per_line,
+            **interval_costs(self.name, mc, migrations, evictions, dirty_ev,
+                             shootdowns),
         )
 
 

@@ -1,6 +1,21 @@
-"""Layer-A experiment runner: simulate (app x policy) over N intervals, aggregate
-the paper's metrics (MPKI, TLB-service cycles, IPC, migration traffic, energy,
-translation breakdown)."""
+"""Layer-A experiment runner: a thin host shell over the device-resident
+MemoryEngine (engine.simloop), aggregating the paper's metrics (MPKI,
+TLB-service cycles, IPC, migration traffic, energy, translation breakdown).
+
+Two execution paths produce SimMetrics:
+
+  simulate(...)              — default: pre-generate all interval traces, run
+                               the whole simulation as one lax.scan on device
+                               (engine.simloop.engine_run), finalize on host.
+  simulate(..., engine=False)— the pre-refactor eager reference: one host
+                               round-trip per interval through sim.policies.
+                               Kept as the equivalence oracle (tests/test_engine
+                               asserts bit-identical metrics) and as the
+                               baseline of benchmarks/engine_throughput.py.
+
+`sweep` vmaps the engine across seeds for each (app, policy) cell — the fleet
+axis is batched on device; apps/policies change shapes so the host loops them.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -9,11 +24,17 @@ from typing import Any
 import numpy as np
 
 from repro.sim import trace as trace_mod
-from repro.sim.config import APPS, MIXES, CPU_GHZ, MachineConfig
+from repro.sim.config import APPS, MIXES, MachineConfig
 from repro.sim.energy import energy_joules
-from repro.sim.policies import POLICY_CLASSES
+from repro.sim.policies import POLICY_CLASSES, interval_costs
 
 BASE_CPI = 0.6  # out-of-order core CPI on non-memory work
+
+_ZERO_TOTALS = {
+    "migrations": 0, "evictions": 0, "dirty": 0, "shootdowns": 0,
+    "mig_bytes": 0.0, "mig_cycles": 0.0, "shootdown_cycles": 0.0,
+    "clflush_cycles": 0.0, "accesses": 0,
+}
 
 
 @dataclasses.dataclass
@@ -42,44 +63,22 @@ class SimMetrics:
         return d
 
 
-def simulate(
+def _finalize(
     app: str,
     policy: str,
-    mc: MachineConfig | None = None,
-    intervals: int = 5,
-    accesses: int | None = None,
-    seed: int = 7,
+    mc: MachineConfig,
+    totals: dict,
+    counters,
+    inst_per_access: float,
+    footprint_pages: int,
 ) -> SimMetrics:
-    mc = mc or MachineConfig()
-    trace0 = trace_mod.generate(app, seed, 0, accesses)
-    pol = POLICY_CLASSES[policy](mc, trace0, seed)
-
-    totals = {
-        "migrations": 0, "evictions": 0, "dirty": 0, "shootdowns": 0,
-        "mig_bytes": 0.0, "mig_cycles": 0.0, "shootdown_cycles": 0.0,
-        "clflush_cycles": 0.0, "accesses": 0,
-    }
-    tr = trace0
-    for i in range(intervals):
-        if i > 0:
-            tr = trace_mod.generate(app, seed, i, accesses)
-        res = pol.run_interval(tr)
-        totals["migrations"] += res.migrations
-        totals["evictions"] += res.evictions
-        totals["dirty"] += res.dirty_evictions
-        totals["shootdowns"] += res.shootdowns
-        totals["mig_bytes"] += res.mig_bytes
-        totals["mig_cycles"] += res.mig_cycles
-        totals["shootdown_cycles"] += res.shootdown_cycles
-        totals["clflush_cycles"] += res.clflush_cycles
-        totals["accesses"] += tr.sp.shape[0]
-
-    c = pol.sim.counters
+    """Metrics from accumulated per-interval totals + final scan counters."""
+    c = counters
     f = lambda x: float(np.asarray(x))
     cycles_trans = (
         f(c.cycles_tlb) + f(c.cycles_walk) + f(c.cycles_bitmap) + f(c.cycles_remap)
     )
-    instructions = totals["accesses"] * tr.inst_per_access
+    instructions = totals["accesses"] * inst_per_access
     total_cycles = (
         instructions * BASE_CPI
         + cycles_trans
@@ -103,7 +102,7 @@ def simulate(
         totals["mig_bytes"], total_cycles, dram_capacity_factor=dram_cap,
     )
 
-    fp_bytes = tr.footprint_pages * 4096.0
+    fp_bytes = footprint_pages * 4096.0
     return SimMetrics(
         app=app,
         policy=policy,
@@ -132,6 +131,135 @@ def simulate(
         traffic_ratio=totals["mig_bytes"] / fp_bytes,
         energy=energy,
     )
+
+
+def _totals_from_stats(
+    policy: str, mc: MachineConfig, stats, accesses_per_interval: int
+) -> dict:
+    """Accumulate engine per-interval stats in the eager path's order/dtypes."""
+    totals = dict(_ZERO_TOTALS)
+    m_i = np.asarray(stats.migrations)
+    e_i = np.asarray(stats.evictions)
+    d_i = np.asarray(stats.dirty_evictions)
+    s_i = np.asarray(stats.shootdowns)
+    for m, e, d, s in zip(m_i.tolist(), e_i.tolist(), d_i.tolist(), s_i.tolist()):
+        costs = interval_costs(policy, mc, m, e, d, s)
+        totals["migrations"] += m
+        totals["evictions"] += e
+        totals["dirty"] += d
+        totals["shootdowns"] += s
+        totals["mig_bytes"] += costs["mig_bytes"]
+        totals["mig_cycles"] += costs["mig_cycles"]
+        totals["shootdown_cycles"] += costs["shootdown_cycles"]
+        totals["clflush_cycles"] += costs["clflush_cycles"]
+        totals["accesses"] += accesses_per_interval
+    return totals
+
+
+def simulate(
+    app: str,
+    policy: str,
+    mc: MachineConfig | None = None,
+    intervals: int = 5,
+    accesses: int | None = None,
+    seed: int = 7,
+    engine: bool = True,
+    counter_backend: str = "jax",
+) -> SimMetrics:
+    """Simulate (app x policy) over N intervals and aggregate SimMetrics."""
+    if not engine:
+        return simulate_eager(app, policy, mc, intervals, accesses, seed)
+    from repro.engine import simloop  # lazy: sim.__init__ imports this module
+
+    mc = mc or MachineConfig()
+    chunks, meta = simloop.make_chunks(app, policy, mc, seed, intervals, accesses)
+    spec = simloop.EngineSpec(
+        policy=policy,
+        mc=mc,
+        num_superpages=meta["num_superpages"],
+        footprint_pages=meta["footprint_pages"],
+        counter_backend=counter_backend,
+    )
+    state, stats = simloop.engine_run(spec, simloop.engine_init(spec), chunks)
+    totals = _totals_from_stats(policy, mc, stats, meta["accesses_per_interval"])
+    return _finalize(
+        app, policy, mc, totals, state.sim.counters,
+        meta["inst_per_access"], meta["footprint_pages"],
+    )
+
+
+def simulate_eager(
+    app: str,
+    policy: str,
+    mc: MachineConfig | None = None,
+    intervals: int = 5,
+    accesses: int | None = None,
+    seed: int = 7,
+) -> SimMetrics:
+    """Pre-refactor host-looped reference path (one round-trip per interval)."""
+    mc = mc or MachineConfig()
+    trace0 = trace_mod.generate(app, seed, 0, accesses)
+    pol = POLICY_CLASSES[policy](mc, trace0, seed)
+
+    totals = dict(_ZERO_TOTALS)
+    tr = trace0
+    for i in range(intervals):
+        if i > 0:
+            tr = trace_mod.generate(app, seed, i, accesses)
+        res = pol.run_interval(tr)
+        totals["migrations"] += res.migrations
+        totals["evictions"] += res.evictions
+        totals["dirty"] += res.dirty_evictions
+        totals["shootdowns"] += res.shootdowns
+        totals["mig_bytes"] += res.mig_bytes
+        totals["mig_cycles"] += res.mig_cycles
+        totals["shootdown_cycles"] += res.shootdown_cycles
+        totals["clflush_cycles"] += res.clflush_cycles
+        totals["accesses"] += tr.sp.shape[0]
+
+    return _finalize(
+        app, policy, mc, totals, pol.sim.counters,
+        tr.inst_per_access, tr.footprint_pages,
+    )
+
+
+def sweep(
+    apps: list[str],
+    policies: list[str],
+    seeds: list[int],
+    mc: MachineConfig | None = None,
+    intervals: int = 5,
+    accesses: int | None = None,
+    counter_backend: str = "jax",
+) -> dict[tuple[str, str, int], SimMetrics]:
+    """Fleet sweep: every (app x policy) cell, vmapping the engine over seeds.
+
+    One compile + one device program per (app, policy); the seed axis is
+    batched (engine.simloop.sweep_seeds). Returns {(app, policy, seed): metrics}.
+    """
+    from repro.engine import simloop  # lazy: sim.__init__ imports this module
+
+    mc = mc or MachineConfig()
+    out: dict[tuple[str, str, int], SimMetrics] = {}
+    for app in apps:
+        for policy in policies:
+            finals, stats, meta = simloop.sweep_seeds(
+                app, policy, mc, seeds, intervals, accesses,
+                counter_backend=counter_backend,
+            )
+            for i, seed in enumerate(seeds):
+                per_seed = type(stats)(*(np.asarray(x)[i] for x in stats))
+                totals = _totals_from_stats(
+                    policy, mc, per_seed, meta["accesses_per_interval"]
+                )
+                counters = type(finals.sim.counters)(
+                    *(np.asarray(x)[i] for x in finals.sim.counters)
+                )
+                out[(app, policy, seed)] = _finalize(
+                    app, policy, mc, totals, counters,
+                    meta["inst_per_access"], meta["footprint_pages"],
+                )
+    return out
 
 
 def workloads(include_mixes: bool = True) -> list[str]:

@@ -70,17 +70,14 @@ def _acc(c: SimCounters, **kw) -> SimCounters:
     return c._replace(**{k: getattr(c, k) + v for k, v in kw.items()})
 
 
-@functools.partial(jax.jit, static_argnames=("kind", "mc"))
-def run_interval(
-    kind: str,
-    mc: MachineConfig,
-    state: SimState,
-    vpn: jax.Array,  # int32[A] 4KB page id (global)
-    sp: jax.Array,  # int32[A] superpage id
-    in_dram: jax.Array,  # bool[A] residency at interval start
-    is_write: jax.Array,  # bool[A]
-) -> SimState:
-    """Scan the interval's accesses; returns state with accumulated counters."""
+def make_access_step(kind: str, mc: MachineConfig):
+    """Build the per-access scan step for one TranslationKind.
+
+    Returned step: (SimState, (vpn, sp, in_dram, is_write)) -> (SimState, None).
+    `run_interval` scans it over one interval's accesses; engine.simloop embeds
+    the same step inside its whole-simulation scan so the device-resident
+    engine is bit-identical to the host-looped path.
+    """
 
     l1l, l2l = mc.l1_tlb_lat, mc.l2_tlb_lat
 
@@ -168,5 +165,21 @@ def run_interval(
         )
         return SimState(tlb4, tlb2m, bmc, now + 1, c), None
 
-    state, _ = jax.lax.scan(step, state, (vpn, sp, in_dram, is_write))
+    return step
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "mc"))
+def run_interval(
+    kind: str,
+    mc: MachineConfig,
+    state: SimState,
+    vpn: jax.Array,  # int32[A] 4KB page id (global)
+    sp: jax.Array,  # int32[A] superpage id
+    in_dram: jax.Array,  # bool[A] residency at interval start
+    is_write: jax.Array,  # bool[A]
+) -> SimState:
+    """Scan the interval's accesses; returns state with accumulated counters."""
+    state, _ = jax.lax.scan(
+        make_access_step(kind, mc), state, (vpn, sp, in_dram, is_write)
+    )
     return state

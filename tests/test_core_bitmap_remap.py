@@ -1,6 +1,9 @@
 """Migration bitmap + remap tables (paper §III-D/E): invariants."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -1,6 +1,9 @@
 """Utility migration (Eq. 1/2) + split TLB model: unit + property tests."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
