@@ -1,0 +1,132 @@
+"""Sweep-cell throughput: host-loop vs batched (vmap) vs mesh-sharded fleet.
+
+cells/sec over a homogeneous 32-cell fleet (one app x policy, many seeds):
+
+  host-loop   one simulate() per cell, serially — how the figure drivers
+              called the engine before the FleetRunner
+  batched     the PR 1 path: sweep_seeds (one vmapped compile, device 0)
+              + the same per-cell finalize the old sim.runner.sweep did
+  sharded     FleetRunner: shard_map over the fleet mesh, padded fleet axis,
+              double-buffered host staging, per-cell SimMetrics
+
+The fleet axis needs enough lanes for device parallelism to beat the vmap
+lanes' vectorization (per-scan-step op overhead dominates small fleets on
+CPU); 32 cells is the knee on a 4-device host mesh and matches the paper
+grid's scale (17 workloads x 5 policies).
+
+Standalone (python -m benchmarks.fleet_throughput) forces 4 host devices so
+the mesh is real; under benchmarks.run it uses whatever devices exist.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if (
+    __name__ == "__main__"
+    and "jax" not in sys.modules
+    and "host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
+):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=4"
+    ).strip()
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import QUICK, emit
+
+APP = "streamcluster"
+POLICY = "rainbow"
+FLEET = 32
+INTERVALS = 3 if QUICK else 6
+ACCESSES = 10_000 if QUICK else 60_000
+
+
+def _bench(fn, reps: int = 2) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _measure() -> dict:
+    import repro.engine.simloop as simloop
+    from repro.engine import fleet
+    from repro.sim.config import MachineConfig
+    from repro.sim.runner import finalize_metrics, simulate, totals_from_stats
+
+    mc = MachineConfig()
+    seeds = list(range(FLEET))
+    plan = fleet.SweepPlan.grid(
+        [APP], [POLICY], tuple(seeds), intervals=INTERVALS, accesses=ACCESSES
+    )
+    runner = fleet.FleetRunner()
+
+    def host_loop():
+        for s in seeds:
+            simulate(APP, POLICY, mc, intervals=INTERVALS, accesses=ACCESSES,
+                     seed=s)
+
+    def batched():
+        finals, stats, meta = simloop.sweep_seeds(
+            APP, POLICY, mc, seeds, intervals=INTERVALS, accesses=ACCESSES
+        )
+        for i in range(len(seeds)):
+            per = type(stats)(*(np.asarray(x)[i] for x in stats))
+            totals = totals_from_stats(POLICY, mc, per,
+                                       meta["accesses_per_interval"])
+            counters = type(finals.sim.counters)(
+                *(np.asarray(x)[i] for x in finals.sim.counters)
+            )
+            finalize_metrics(APP, POLICY, mc, totals, counters,
+                             meta["inst_per_access"], meta["footprint_pages"])
+
+    def sharded():
+        runner.run(plan)
+
+    modes = [("host-loop", host_loop, 1), ("batched-vmap", batched, 2),
+             ("sharded-fleet", sharded, 2)]
+    rows, rates = [], {}
+    simulate(APP, POLICY, mc, intervals=INTERVALS, accesses=ACCESSES,
+             seed=seeds[0])  # warm the single-cell compile for host-loop
+    for name, fn, reps in modes:
+        fn()  # warm (compile + caches)
+        t = _bench(fn, reps=reps)
+        rates[name] = FLEET / t
+        rows.append({
+            "mode": name,
+            "cells": FLEET,
+            "intervals": INTERVALS,
+            "accesses_per_interval": ACCESSES,
+            "devices": len(jax.devices()),
+            "seconds": round(t, 3),
+            "cells_per_sec": round(FLEET / t, 3),
+        })
+    return {
+        "rows": rows,
+        "sharded_vs_vmap": rates["sharded-fleet"] / rates["batched-vmap"],
+        "sharded_vs_host": rates["sharded-fleet"] / rates["host-loop"],
+    }
+
+
+def run() -> None:
+    t0 = time.time()
+    out = _measure()
+    emit(
+        "fleet_throughput", out["rows"], t0,
+        derived=(
+            f"sharded_vs_vmap={out['sharded_vs_vmap']:.2f}x;"
+            f"sharded_vs_hostloop={out['sharded_vs_host']:.2f}x;"
+            f"devices={len(jax.devices())}"
+        ),
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -8,8 +8,8 @@ from repro.sim.config import POLICIES
 
 def run():
     t0 = time.time()
-    cells = all_cells()
-    apps = sorted({a for a, _ in cells})
+    cells = all_cells()  # FleetResult: the sharded sweep-plan run
+    apps = cells.apps()
     rows = []
     ratios = {p: [] for p in POLICIES}
     for app in apps:

@@ -1,40 +1,49 @@
-"""Figs. 13/14: sensitivity of Rainbow to the sampling interval and top-N."""
-import dataclasses
+"""Figs. 13/14: sensitivity of Rainbow to the sampling interval and top-N.
+
+The two sweeps are declared as tagged SweepPlans (machine-config overrides x
+apps) and run through the same FleetRunner as every other figure — cells that
+share a (config, shape) signature fuse onto one sharded fleet axis."""
 import time
 
 from benchmarks.common import emit, sim_kwargs
+from repro.engine import fleet
 from repro.sim.config import MachineConfig
-from repro.sim.runner import simulate
 
 APPS = ["soplex", "GUPS"]
 
 
-def run():
-    t0 = time.time()
+def sweep_plan() -> "fleet.SweepPlan":
     kw = sim_kwargs()
-    rows = []
     base_acc = kw["accesses"] or 120_000
+    plan = fleet.SweepPlan(())
     # Fig 13: interval scaling — emulate longer intervals with more accesses
     # (and top-N scaled by the same factor, as the paper does)
     for factor, label in ((0.25, "0.25x"), (1.0, "1x"), (4.0, "4x")):
-        mc = MachineConfig(top_n=max(4, int(100 * factor)))
-        for app in APPS:
-            m = simulate(app, "rainbow", mc=mc, intervals=kw["intervals"],
-                         accesses=int(base_acc * factor))
-            rows.append({"sweep": "interval", "setting": label, "app": app,
-                         "ipc": round(m.ipc, 4),
-                         "traffic": round(m.traffic_ratio, 4),
-                         "migrations": m.migrations})
+        plan += fleet.SweepPlan.grid(
+            APPS, ["rainbow"],
+            mc=MachineConfig(top_n=max(4, int(100 * factor))),
+            intervals=kw["intervals"], accesses=int(base_acc * factor),
+            tags=(("sweep", "interval"), ("setting", label)),
+        )
     # Fig 14: top-N sweep at fixed interval
     for topn in (10, 50, 100, 200):
-        mc = MachineConfig(top_n=topn)
-        for app in APPS:
-            m = simulate(app, "rainbow", mc=mc, intervals=kw["intervals"],
-                         accesses=base_acc)
-            rows.append({"sweep": "top_n", "setting": topn, "app": app,
-                         "ipc": round(m.ipc, 4),
-                         "traffic": round(m.traffic_ratio, 4),
-                         "migrations": m.migrations})
+        plan += fleet.SweepPlan.grid(
+            APPS, ["rainbow"], mc=MachineConfig(top_n=topn),
+            intervals=kw["intervals"], accesses=base_acc,
+            tags=(("sweep", "top_n"), ("setting", topn)),
+        )
+    return plan
+
+
+def run():
+    t0 = time.time()
+    result = fleet.FleetRunner().run(sweep_plan())
+    rows = [
+        {"sweep": cell.tag["sweep"], "setting": cell.tag["setting"],
+         "app": cell.app, "ipc": round(m.ipc, 4),
+         "traffic": round(m.traffic_ratio, 4), "migrations": m.migrations}
+        for cell, m in result.items()
+    ]
     emit("paper_fig13_14_sensitivity", rows, t0, "ipc_stabilizes_by_topN=50")
     return rows
 

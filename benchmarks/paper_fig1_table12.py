@@ -2,40 +2,34 @@
 
 Verifies the synthetic traces actually reproduce the paper's measured
 statistics: CDF of touched 4KB pages per superpage, hot-page percentage, and
-the distribution of hot pages across superpages."""
+the distribution of hot pages across superpages. The app grid is declared as
+the same SweepPlan schema the simulation figures use; FleetRunner's
+calibration mode computes the per-cell trace statistics (host-only)."""
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from benchmarks.common import emit
+from repro.engine import fleet
 from repro.sim.config import APPS, PAGES_PER_SP
-from repro.sim.trace import generate
 
 
 def run(apps=None):
     t0 = time.time()
+    plan = fleet.SweepPlan.grid(apps or list(APPS), ["rainbow"])
+    stats = fleet.FleetRunner().calibration(plan)
     rows = []
-    for app in apps or list(APPS):
-        tr = generate(app, seed=7, interval=1)
-        sp_touched = {}
-        for s, p in zip(tr.sp, tr.page):
-            sp_touched.setdefault(int(s), set()).add(int(p))
-        touched = np.array([len(v) for v in sp_touched.values()])
-        counts = np.bincount(tr.vpn.astype(np.int64), minlength=tr.footprint_pages)
-        order = np.argsort(-counts)
-        csum = np.cumsum(counts[order])
-        n_hot = int(np.searchsorted(csum, 0.70 * csum[-1])) + 1
-        ws_pages = int((counts > 0).sum())
+    for cell in plan:
+        s = stats[cell]
         rows.append({
-            "app": app,
-            "sp_with_le32_touched_pct": round(float((touched <= 32).mean() * 100), 1),
-            "median_touched_per_sp": int(np.median(touched)),
+            "app": cell.app,
+            "sp_with_le32_touched_pct": s["sp_with_le32_touched_pct"],
+            "median_touched_per_sp": s["median_touched_per_sp"],
             "pages_per_sp": PAGES_PER_SP,
-            "hot_page_pct_measured": round(100 * n_hot / max(ws_pages, 1), 2),
-            "hot_page_pct_paper": APPS[app].hot_page_pct if app in APPS else "",
-            "working_set_pages": ws_pages,
+            "hot_page_pct_measured": s["hot_page_pct_measured"],
+            "hot_page_pct_paper": APPS[cell.app].hot_page_pct
+            if cell.app in APPS else "",
+            "working_set_pages": s["working_set_pages"],
         })
     emit("paper_fig1_table12", rows, t0, "calibration")
     return rows

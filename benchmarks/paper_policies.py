@@ -1,23 +1,25 @@
-"""Shared driver for Figs. 7-12 + 15: run every (workload x policy) cell once,
-cache the SimMetrics, and let each figure script slice its columns."""
+"""Shared driver for Figs. 7-12 + 15: the full (workload x policy) grid is
+declared ONCE as an engine.fleet.SweepPlan and executed by the mesh-sharded
+FleetRunner; figure scripts slice their columns from the cached FleetResult."""
 from __future__ import annotations
 
 import functools
 
 from benchmarks.common import sim_kwargs, workloads
+from repro.engine import fleet
 from repro.sim.config import POLICIES
-from repro.sim.runner import simulate
+
+
+def grid_plan() -> "fleet.SweepPlan":
+    """The paper's §V evaluation grid (Figs. 7-12, 15)."""
+    kw = sim_kwargs()
+    return fleet.SweepPlan.grid(
+        workloads(), POLICIES,
+        intervals=kw["intervals"], accesses=kw["accesses"],
+    )
 
 
 @functools.lru_cache(maxsize=None)
-def _cell(app: str, policy: str, intervals: int, accesses) -> object:
-    return simulate(app, policy, intervals=intervals, accesses=accesses)
-
-
-def all_cells():
-    kw = sim_kwargs()
-    out = {}
-    for app in workloads():
-        for pol in POLICIES:
-            out[(app, pol)] = _cell(app, pol, kw["intervals"], kw["accesses"])
-    return out
+def all_cells() -> "fleet.FleetResult":
+    """Run the grid once per process; every figure renders from this result."""
+    return fleet.FleetRunner().run(grid_plan())

@@ -15,6 +15,7 @@ import traceback
 def main() -> None:
     from benchmarks import (
         engine_throughput,
+        fleet_throughput,
         paper_fig1_table12,
         paper_fig7_mpki,
         paper_fig8_tlb_cycles,
@@ -41,6 +42,7 @@ def main() -> None:
         paper_fig15_runtime,
         paper_fig13_14_sensitivity,
         engine_throughput,
+        fleet_throughput,
         serving_rainbow,
         roofline,
     ]

@@ -20,3 +20,40 @@ for policy in ("rainbow", "flat-static"):
           f"migrations={m.migrations}")
 print("engine smoke OK")
 EOF
+
+echo "== multi-device smoke: sharded FleetRunner on 4 forced host devices =="
+XLA_FLAGS="--xla_force_host_platform_device_count=4" python - <<'EOF'
+import jax
+from repro.engine import fleet
+from repro.sim.runner import simulate
+
+assert len(jax.devices()) == 4, jax.devices()
+plan = fleet.SweepPlan.grid(
+    ["streamcluster"], ["rainbow", "flat-static"], (0, 1, 2),
+    intervals=2, accesses=3000,
+)  # 6 cells -> 2 groups of 3, each padded to the 4-device mesh
+res = fleet.FleetRunner().run(plan)
+assert len(res) == 6
+one = simulate("streamcluster", "rainbow", intervals=2, accesses=3000, seed=2)
+got = res[("streamcluster", "rainbow", 2)]
+assert got.ipc == one.ipc and got.migrations == one.migrations, (got, one)
+print(f"  sharded fleet: {len(res)} cells across {len(jax.devices())} devices, "
+      "bit-identical to single-device engine")
+EOF
+
+echo "== hscc parity: engine vs recorded full-table snapshot (spot check) =="
+python - <<'EOF'
+import json, pathlib
+from repro.sim.runner import simulate
+
+snap = json.loads(pathlib.Path("scripts/hscc_parity_snapshot.json").read_text())
+sc = snap["scale"]
+for policy in ("hscc-4kb-mig", "hscc-2mb-mig"):
+    m = simulate("soplex", policy, intervals=sc["intervals"],
+                 accesses=sc["accesses"], seed=sc["seed"])
+    ref = snap["cells"]["soplex"][policy]
+    assert m.migrations == ref["migrations"] and abs(m.ipc - ref["ipc"]) < 1e-9, (
+        policy, m.migrations, ref)
+    print(f"  {policy:12s} matches snapshot (mig={m.migrations})")
+print("hscc snapshot spot-check OK (full table: scripts/validate_hscc_parity.py)")
+EOF

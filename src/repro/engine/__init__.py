@@ -30,12 +30,13 @@ __all__ = [
     "plan_and_apply",
     "rotate_monitors",
     "simloop",
+    "fleet",
 ]
 
 
-def __getattr__(name):  # lazy: simloop pulls in repro.sim (see module docstring)
-    if name == "simloop":
+def __getattr__(name):  # lazy: these pull in repro.sim (see module docstring)
+    if name in ("simloop", "fleet"):
         import importlib
 
-        return importlib.import_module("repro.engine.simloop")
+        return importlib.import_module(f"repro.engine.{name}")
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,370 @@
+"""Sharded FleetRunner: mesh-parallel (app x policy x seed x config) sweeps.
+
+The paper's evaluation (§V, Figs. 7-15) is a grid of (workload x policy x
+machine-config) simulations. PR 1 fused ONE simulation into a single lax.scan
+and vmapped the seed fleet; this module owns the grid itself:
+
+  SweepPlan    declares the cells (apps x policies x seeds x MachineConfig
+               overrides, each optionally tagged for later slicing);
+  FleetRunner  groups cells that share a compile signature (EngineSpec +
+               interval shape), pads each group's flattened fleet axis to the
+               mesh size, shards it across a 1-D "fleet" device mesh via
+               shard_map of the SAME vmapped body engine_run_batch jits
+               (launch.mesh.make_fleet_mesh / launch.sharding.batch_shardings),
+               and double-buffers host-side make_chunks_np staging against the
+               in-flight device scan: while group i's sharded scan runs on the
+               mesh, group i+1's traces are generated and device_put sharded
+               (async dispatch; fleet-state buffers are donated and retired
+               chunk buffers recycled, so staging reuses the previous group's
+               memory);
+  FleetResult  maps every cell back to its SimMetrics, in plan order, with
+               tag/field selection for figure scripts.
+
+One engine path from a single-CPU test to a multi-device parameter study:
+every paper_fig* module, sim.runner.sweep, sensitivity sweeps, and future
+autotuning searches declare a plan and render rows from the result.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+from typing import Any, Iterator, Mapping
+
+import jax
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+import repro.engine.simloop as simloop
+from repro.launch.mesh import make_fleet_mesh
+from repro.launch.sharding import batch_shardings
+from repro.sim import trace as trace_mod
+from repro.sim.config import MachineConfig
+from repro.sim.runner import SimMetrics, finalize_metrics, totals_from_stats
+
+Tags = tuple[tuple[str, Any], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCell:
+    """One simulation of the sweep grid (hashable: it IS the result key)."""
+
+    app: str
+    policy: str
+    seed: int = 7
+    mc: MachineConfig = dataclasses.field(default_factory=MachineConfig)
+    intervals: int = 5
+    accesses: int | None = None
+    counter_backend: str = "jax"
+    tags: Tags = ()
+
+    @property
+    def tag(self) -> dict[str, Any]:
+        return dict(self.tags)
+
+    @property
+    def label(self) -> str:
+        return f"{self.app}/{self.policy}/seed={self.seed}"
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPlan:
+    """An ordered set of SweepCells; the declarative input of FleetRunner."""
+
+    cells: tuple[SweepCell, ...]
+
+    @staticmethod
+    def grid(
+        apps,
+        policies,
+        seeds=(7,),
+        *,
+        mc: MachineConfig | None = None,
+        intervals: int = 5,
+        accesses: int | None = None,
+        counter_backend: str = "jax",
+        tags: Tags = (),
+    ) -> "SweepPlan":
+        """The dense (apps x policies x seeds) grid at one machine config."""
+        mc = mc or MachineConfig()
+        return SweepPlan(tuple(
+            SweepCell(a, p, s, mc, intervals, accesses, counter_backend,
+                      tuple(tags))
+            for a in apps for p in policies for s in seeds
+        ))
+
+    def __add__(self, other: "SweepPlan") -> "SweepPlan":
+        return SweepPlan(self.cells + other.cells)
+
+    def __len__(self) -> int:
+        return len(self.cells)
+
+    def __iter__(self) -> Iterator[SweepCell]:
+        return iter(self.cells)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetGroup:
+    """Cells sharing one compile signature -> one sharded device program."""
+
+    spec: simloop.EngineSpec
+    intervals: int
+    cells: tuple[SweepCell, ...]
+    meta: dict
+
+
+def plan_groups(plan: SweepPlan) -> list[FleetGroup]:
+    """Group plan cells by compile signature, preserving first-seen order.
+
+    Apps change array shapes (footprint/superpage counts) and configs change
+    the EngineSpec, so only (seed x same-shape app) cells fuse into one fleet
+    axis; the signature is probed from profile metadata without generating a
+    single access (trace.probe_meta).
+    """
+    buckets: dict[tuple, list[SweepCell]] = collections.defaultdict(list)
+    metas: dict[tuple, dict] = {}
+    seen: set[SweepCell] = set()
+    for cell in plan.cells:
+        if cell in seen:  # exact duplicates collapse to one run
+            continue
+        seen.add(cell)
+        meta = trace_mod.probe_meta(cell.app, cell.accesses)
+        spec = simloop.EngineSpec(
+            policy=cell.policy,
+            mc=cell.mc,
+            num_superpages=meta["num_superpages"],
+            footprint_pages=meta["footprint_pages"],
+            counter_backend=cell.counter_backend,
+        )
+        key = (spec, cell.intervals, meta["accesses_per_interval"],
+               meta["inst_per_access"])
+        buckets[key].append(cell)
+        metas[key] = meta
+    return [
+        FleetGroup(spec=key[0], intervals=key[1], cells=tuple(cells),
+                   meta=metas[key])
+        for key, cells in buckets.items()
+    ]
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_fleet_fn(spec: simloop.EngineSpec, mesh):
+    """shard_map of the shared vmapped engine body over the fleet mesh.
+
+    Per-shard it is exactly engine_run_batch's program (simloop.batch_run), so
+    sharded results are bit-identical to the single-device vmap path. The
+    fleet states are donated (the final states alias them); trace chunks are
+    inputs-only to the scan so XLA cannot alias them into any output — their
+    buffers are instead recycled when the group retires and the host drops its
+    reference, bounding double-buffer memory at two staged groups.
+    """
+    fn = shard_map(
+        simloop.batch_run(spec),
+        mesh=mesh,
+        in_specs=(P("fleet"), P("fleet")),
+        out_specs=(P("fleet"), P("fleet")),
+    )
+    return jax.jit(fn, donate_argnums=(0,))
+
+
+def _pad_fleet(arrs, pad: int):
+    """Pad the leading fleet axis by repeating the last member `pad` times."""
+    if pad == 0:
+        return arrs
+    return jax.tree.map(
+        lambda x: np.concatenate([x, np.repeat(x[-1:], pad, axis=0)]), arrs
+    )
+
+
+class FleetRunner:
+    """Run SweepPlans over a device mesh with double-buffered trace staging.
+
+    mesh           1-D "fleet" mesh (default: make_fleet_mesh over all
+                   devices; built lazily so constructing a runner never
+                   touches jax device state).
+    double_buffer  keep one group's sharded scan in flight while the next
+                   group's traces are generated host-side and staged to the
+                   mesh; False retires each group before staging the next
+                   (the serial reference behavior).
+    """
+
+    def __init__(self, mesh=None, double_buffer: bool = True):
+        self._mesh = mesh
+        self.double_buffer = double_buffer
+
+    @property
+    def mesh(self):
+        if self._mesh is None:
+            self._mesh = make_fleet_mesh()
+        return self._mesh
+
+    # -- staging ------------------------------------------------------------
+
+    def _stage(self, group: FleetGroup):
+        """Host trace generation + one sharded device_put per group.
+
+        Runs concurrently with the previous group's device scan (the scan was
+        dispatched asynchronously) — this host/device overlap is the whole
+        point of the double buffer.
+        """
+        mesh = self.mesh
+        chunk_list, metas = [], []
+        for cell in group.cells:
+            chunks, meta = simloop.make_chunks_np(
+                cell.app, cell.policy, cell.mc, cell.seed,
+                cell.intervals, cell.accesses,
+            )
+            chunk_list.append(chunks)
+            metas.append(meta)
+        simloop.require_uniform_meta(
+            metas + [group.meta], [c.label for c in group.cells] + ["probe"]
+        )
+        batch = jax.tree.map(lambda *xs: np.stack(xs), *chunk_list)
+        pad = -len(group.cells) % mesh.devices.size
+        batch = _pad_fleet(batch, pad)
+
+        state0 = jax.tree.map(np.asarray, simloop.engine_init(group.spec))
+        states = jax.tree.map(
+            lambda x: np.broadcast_to(x, (len(group.cells) + pad,) + x.shape),
+            state0,
+        )
+        return jax.device_put(
+            (states, batch), batch_shardings((states, batch), mesh)
+        )
+
+    # -- retire -------------------------------------------------------------
+
+    def _retire(self, group: FleetGroup, finals, stats, out: dict):
+        """Block on one group's device results and finalize per-cell metrics."""
+        stats_h = jax.tree.map(np.asarray, stats)
+        counters_h = jax.tree.map(np.asarray, finals.sim.counters)
+        for i, cell in enumerate(group.cells):  # padding lanes are dropped
+            per_cell = type(stats)(*(x[i] for x in stats_h))
+            totals = totals_from_stats(
+                cell.policy, cell.mc, per_cell,
+                group.meta["accesses_per_interval"],
+            )
+            counters = type(counters_h)(*(x[i] for x in counters_h))
+            out[cell] = finalize_metrics(
+                cell.app, cell.policy, cell.mc, totals, counters,
+                group.meta["inst_per_access"], group.meta["footprint_pages"],
+            )
+
+    # -- the sweep ----------------------------------------------------------
+
+    def run(self, plan: SweepPlan) -> "FleetResult":
+        """Execute every cell of the plan; metrics come back in plan order."""
+        groups = plan_groups(plan)
+        metrics: dict[SweepCell, SimMetrics] = {}
+        in_flight: collections.deque = collections.deque()
+        for group in groups:
+            states, chunks = self._stage(group)
+            finals, stats = _sharded_fleet_fn(group.spec, self.mesh)(
+                states, chunks
+            )  # async dispatch: returns before the mesh finishes
+            in_flight.append((group, finals, stats))
+            while len(in_flight) >= (2 if self.double_buffer else 1):
+                self._retire(*in_flight.popleft(), metrics)
+        while in_flight:
+            self._retire(*in_flight.popleft(), metrics)
+        return FleetResult(cells=tuple(dict.fromkeys(plan.cells)), metrics=metrics)
+
+    # -- trace calibration (Fig. 1 / Tables I-II, no simulation) ------------
+
+    def calibration(self, plan: SweepPlan) -> dict[SweepCell, dict]:
+        """Per-cell trace-calibration statistics (host-only, no device work).
+
+        Lets the trace-validation figures declare the same SweepPlan grid as
+        the simulation figures and render rows from one API.
+        """
+        return {
+            cell: trace_calibration_stats(
+                trace_mod.generate(cell.app, cell.seed, interval=1,
+                                   accesses=cell.accesses)
+            )
+            for cell in plan.cells
+        }
+
+
+def trace_calibration_stats(tr) -> dict[str, Any]:
+    """Paper Fig. 1 / Tables I-II statistics of one generated trace."""
+    sp_touched: dict[int, set] = {}
+    for s, p in zip(tr.sp, tr.page):
+        sp_touched.setdefault(int(s), set()).add(int(p))
+    touched = np.array([len(v) for v in sp_touched.values()])
+    counts = np.bincount(tr.vpn.astype(np.int64), minlength=tr.footprint_pages)
+    order = np.argsort(-counts)
+    csum = np.cumsum(counts[order])
+    n_hot = int(np.searchsorted(csum, 0.70 * csum[-1])) + 1
+    ws_pages = int((counts > 0).sum())
+    return {
+        "sp_with_le32_touched_pct": round(float((touched <= 32).mean() * 100), 1),
+        "median_touched_per_sp": int(np.median(touched)),
+        "hot_page_pct_measured": round(100 * n_hot / max(ws_pages, 1), 2),
+        "working_set_pages": ws_pages,
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetResult:
+    """Cell -> SimMetrics mapping in plan order, sliceable by field or tag."""
+
+    cells: tuple[SweepCell, ...]
+    metrics: Mapping[SweepCell, SimMetrics]
+
+    def __len__(self) -> int:
+        return len(self.cells)
+
+    def __iter__(self) -> Iterator[SweepCell]:
+        return iter(self.cells)
+
+    def items(self):
+        return [(c, self.metrics[c]) for c in self.cells]
+
+    def __getitem__(self, key) -> SimMetrics:
+        if isinstance(key, SweepCell):
+            return self.metrics[key]
+        app, policy, *rest = key
+        return self.one(app=app, policy=policy,
+                        **({"seed": rest[0]} if rest else {}))
+
+    def apps(self) -> list[str]:
+        return sorted({c.app for c in self.cells})
+
+    def policies(self) -> list[str]:
+        out: list[str] = []
+        for c in self.cells:
+            if c.policy not in out:
+                out.append(c.policy)
+        return out
+
+    def select(self, **filters) -> list[tuple[SweepCell, SimMetrics]]:
+        """Cells matching every filter; SweepCell field names match fields,
+        anything else matches the cell's tags."""
+        fields = {f.name for f in dataclasses.fields(SweepCell)}
+
+        def ok(cell: SweepCell) -> bool:
+            for k, v in filters.items():
+                got = getattr(cell, k) if k in fields else cell.tag.get(k)
+                if got != v:
+                    return False
+            return True
+
+        return [(c, self.metrics[c]) for c in self.cells if ok(c)]
+
+    def one(self, **filters) -> SimMetrics:
+        hits = self.select(**filters)
+        if len(hits) != 1:
+            raise KeyError(
+                f"{filters} matched {len(hits)} cells"
+                + (f" (e.g. {[c.label for c, _ in hits[:4]]})" if hits else "")
+            )
+        return hits[0][1]
+
+    def rows(self, **filters) -> list[dict[str, Any]]:
+        """SimMetrics.row() per matching cell, annotated with seed + tags."""
+        return [
+            {**m.row(), "seed": c.seed, **c.tag}
+            for c, m in self.select(**filters)
+        ]

@@ -21,8 +21,10 @@ All five §IV-A policies are ported as policy-parameterized step programs:
   rainbow                 : core.rainbow.interval_step (the shared controller)
 
 The engine is bit-identical to the eager path for the state-free policies and
-for rainbow (same ops, same order); the HSCC ports differ only in float dtype
-(f32 vs numpy f64) and sort tie-breaking, which the directional tests tolerate.
+for rainbow (same ops, same order). The HSCC ports could in principle differ
+from the old numpy reference in f32 benefit ties, but were re-validated EXACT
+over the full workload table, after which the numpy host loops were deleted —
+scripts/validate_hscc_parity.py regresses them against the recorded snapshot.
 """
 from __future__ import annotations
 
@@ -113,7 +115,7 @@ def _zero_stats() -> IntervalStats:
 # ---------------------------------------------------------------------------
 
 
-def make_chunks(
+def make_chunks_np(
     app: str,
     policy: str,
     mc: MachineConfig,
@@ -121,7 +123,11 @@ def make_chunks(
     intervals: int,
     accesses: int | None = None,
 ) -> tuple[TraceChunks, dict]:
-    """Generate + stack all interval traces for one (app, policy, seed) run."""
+    """Generate + stack all interval traces HOST-SIDE (numpy TraceChunks).
+
+    The fleet runner stacks many of these along a fleet axis and stages them
+    to the mesh in one sharded device_put, so generation stays off-device.
+    """
     if policy not in POLICY_KINDS:
         raise KeyError(
             f"unknown policy {policy!r}; expected one of {sorted(POLICY_KINDS)}"
@@ -140,11 +146,11 @@ def make_chunks(
     else:
         in_dram = np.zeros_like(wr)
     chunks = TraceChunks(
-        sp=jnp.asarray(np.stack([t.sp for t in traces])),
-        page=jnp.asarray(np.stack([t.page for t in traces])),
-        vpn=jnp.asarray(vpn64.astype(np.int32)),
-        is_write=jnp.asarray(wr),
-        in_dram=jnp.asarray(in_dram),
+        sp=np.stack([t.sp for t in traces]),
+        page=np.stack([t.page for t in traces]),
+        vpn=vpn64.astype(np.int32),
+        is_write=wr,
+        in_dram=in_dram,
     )
     meta = {
         "num_superpages": int(t0.num_superpages),
@@ -153,6 +159,44 @@ def make_chunks(
         "accesses_per_interval": int(t0.sp.shape[0]),
     }
     return chunks, meta
+
+
+def make_chunks(
+    app: str,
+    policy: str,
+    mc: MachineConfig,
+    seed: int,
+    intervals: int,
+    accesses: int | None = None,
+) -> tuple[TraceChunks, dict]:
+    """Generate + stack all interval traces for one (app, policy, seed) run."""
+    chunks, meta = make_chunks_np(app, policy, mc, seed, intervals, accesses)
+    return jax.tree.map(jnp.asarray, chunks), meta
+
+
+def require_uniform_meta(metas: list[dict], labels: list[str]) -> dict:
+    """Assert every fleet member produced identical trace meta.
+
+    Batching silently trusts member 0's shapes, so any disagreement in
+    footprint / superpage count / interval length would corrupt the whole
+    fleet — fail loudly, naming the offending members, instead.
+    """
+    keys = (
+        "num_superpages", "footprint_pages",
+        "accesses_per_interval", "inst_per_access",
+    )
+    base = metas[0]
+    for lbl, m in zip(labels, metas):
+        bad = [k for k in keys if m[k] != base[k]]
+        if bad:
+            detail = "; ".join(
+                f"{k}: {labels[0]}={base[k]} vs {lbl}={m[k]}" for k in bad
+            )
+            raise ValueError(
+                f"fleet members disagree on trace meta ({detail}) — "
+                "cells with different shapes cannot share one batched compile"
+            )
+    return base
 
 
 # ---------------------------------------------------------------------------
@@ -265,7 +309,9 @@ def _hscc_admit(
 ):
     """Fixed-shape HSCC admission: free slots best-first, then swap vs coldest.
 
-    Faithful port of Hscc4K/Hscc2M.migrate: candidates are the top-`cand_k`
+    Faithful port of the numpy Hscc4K/Hscc2M.migrate reference (validated
+    exact over the full workload table, then deleted — see
+    scripts/validate_hscc_parity.py): candidates are the top-`cand_k`
     non-resident units by Eq. 1 benefit above the threshold; the first `free`
     fill free slots, the rest are paired rank-for-rank with the coldest
     residents and admitted when the (double-counted, as in the reference)
@@ -394,14 +440,30 @@ def engine_run(
     )
 
 
+def batch_run(spec: EngineSpec):
+    """Unjitted whole-sim runner vmapped over a leading fleet axis.
+
+    The single body shared by `engine_run_batch` (one-device vmap) and
+    `engine.fleet`'s shard_map partitions — so the sharded fleet is the same
+    program per shard, bit for bit, as the PR 1 vmap path.
+    """
+
+    def run(states: EngineState, chunks: TraceChunks):
+        return jax.vmap(
+            lambda st, ch: jax.lax.scan(
+                lambda s, c: engine_step(spec, s, c), st, ch
+            )
+        )(states, chunks)
+
+    return run
+
+
 @functools.partial(jax.jit, static_argnames=("spec",))
 def engine_run_batch(
     spec: EngineSpec, states: EngineState, chunks: TraceChunks
 ) -> tuple[EngineState, IntervalStats]:
     """vmap of engine_run over a leading batch dim (fleet sweeps over seeds)."""
-    return jax.vmap(
-        lambda st, ch: jax.lax.scan(lambda s, c: engine_step(spec, s, c), st, ch)
-    )(states, chunks)
+    return batch_run(spec)(states, chunks)
 
 
 def sweep_seeds(
@@ -423,7 +485,7 @@ def sweep_seeds(
         *(make_chunks(app, policy, mc, s, intervals, accesses) for s in seeds)
     )
     chunks = jax.tree.map(lambda *xs: jnp.stack(xs), *chunk_list)
-    meta0 = meta[0]
+    meta0 = require_uniform_meta(list(meta), [f"seed={s}" for s in seeds])
     spec = EngineSpec(
         policy=policy,
         mc=mc,

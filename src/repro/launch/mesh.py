@@ -21,6 +21,17 @@ def make_test_mesh(devices: int | None = None, model: int = 1):
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
+def make_fleet_mesh(devices: int | None = None):
+    """1-D mesh over all (or the first N) devices for homogeneous fleet axes.
+
+    Sweep fleets (app x policy x seed x config cells of identical shape) are
+    embarrassingly parallel, so a single "fleet" axis is the whole layout;
+    engine.fleet pads the fleet to a multiple of the mesh size.
+    """
+    n = devices or len(jax.devices())
+    return jax.make_mesh((n,), ("fleet",))
+
+
 def mesh_dp_size(mesh) -> int:
     n = 1
     for ax in ("pod", "data"):

@@ -59,3 +59,12 @@ def sharding_tree(tree, mesh: Mesh):
         tree,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+def batch_shardings(tree, mesh: Mesh, axis: str = "fleet"):
+    """NamedSharding tree sharding every leaf's LEADING dim along `axis`.
+
+    Used to device_put host-staged fleet batches (stacked states/traces)
+    directly into their sharded layout — one transfer per leaf, no gather.
+    """
+    return sharding_tree(jax.tree.map(lambda _: P(axis), tree), mesh)

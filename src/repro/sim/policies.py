@@ -1,20 +1,26 @@
-"""The five memory-management policies of §IV-A, driven interval by interval.
+"""The eager reference policies of §IV-A, driven interval by interval.
 
 Each policy owns: residency state (which 4KB pages / superpages are DRAM-cached),
 a migration routine run at interval boundaries, and the translation kind used by
 the per-access scan (tlbsim). Rainbow reuses the core library (two-stage counting,
 utility admission, remap/bitmap) — Layer A and Layer B share that code.
+
+This module is the SLIM equivalence oracle for the scanned engine
+(engine.simloop): flat-static / dram-only / rainbow, which the engine matches
+bit for bit (tests/test_engine.py). The numpy HSCC host loops were deleted
+after the engine ports were re-validated EXACT (rel-err 0.0 on migrations /
+evictions / MPKI / IPC / mig_bytes) over the full workload table — all apps +
+mixes x {hscc-4kb-mig, hscc-2mb-mig}; scripts/validate_hscc_parity.py keeps
+that check alive against the recorded snapshot.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import counting, migration
 from repro.core import rainbow as rb
 from repro.core.migration import TimingParams, make_timing
 from repro.core.tlb import tlb_invalidate
@@ -170,146 +176,6 @@ class DramOnly(Policy):
         return IntervalResult(counters=tlbsim.zero_counters())
 
 
-class Hscc4K(Policy):
-    """HSCC: flat space, utility migration at 4 KB granularity, 4 KB TLBs."""
-
-    name = "hscc-4kb-mig"
-    kind = "flat4k"
-
-    def __init__(self, mc, trace0, seed=0):
-        super().__init__(mc, trace0, seed)
-        self.resident = np.zeros(self.fp_pages, bool)  # DRAM residency per page
-        self.dirty = np.zeros(self.fp_pages, bool)
-        self.slots_used = 0
-        self.max_slots = mc.dram_pages
-
-    def residency(self, trace: Trace) -> np.ndarray:
-        return self.resident[np.minimum(trace.vpn, self.fp_pages - 1)]
-
-    def migrate(self, trace: Trace, in_dram) -> IntervalResult:
-        mc = self.mc
-        vpn = np.minimum(trace.vpn, self.fp_pages - 1)
-        reads = np.bincount(vpn[~trace.is_write], minlength=self.fp_pages)
-        writes = np.bincount(vpn[trace.is_write], minlength=self.fp_pages)
-        self.dirty |= self.resident & (writes > 0)
-        benefit = (
-            (mc.t_nr - mc.t_dr) * reads
-            + (mc.t_nw - mc.t_dw) * writes
-            - mc.mig_page_cost
-        )
-        benefit[self.resident] = -np.inf  # already cached
-        cand = np.argsort(-benefit)[:512]
-        cand = cand[benefit[cand] > mc.mig_threshold]
-
-        migrations = evictions = dirty_ev = 0
-        free = self.max_slots - self.slots_used
-        admit_free = cand[: max(free, 0)]
-        self.resident[admit_free] = True
-        self.slots_used += len(admit_free)
-        migrations += len(admit_free)
-
-        # evict coldest resident pages for the remainder (clean first)
-        rest = cand[max(free, 0):]
-        if len(rest):
-            res_idx = np.flatnonzero(self.resident)
-            cold_order = res_idx[np.argsort(reads[res_idx] + writes[res_idx])]
-            k = min(len(rest), len(cold_order))
-            victims = cold_order[:k]
-            gain_in = benefit[rest[:k]]
-            gain_out = (
-                (mc.t_nr - mc.t_dr) * reads[victims]
-                + (mc.t_nw - mc.t_dw) * writes[victims]
-            )
-            wb = np.where(self.dirty[victims], mc.writeback_page_cost, 0.0)
-            ok = gain_in - gain_out - mc.mig_page_cost - wb > mc.mig_threshold
-            victims, incoming = victims[ok], rest[:k][ok]
-            self.resident[victims] = False
-            self.resident[incoming] = True
-            dirty_ev = int(self.dirty[victims].sum())
-            self.dirty[victims] = False
-            evictions = len(victims)
-            migrations += len(incoming)
-
-        # every migration / eviction remaps a page -> shootdown + clflush
-        shootdowns = migrations + evictions
-        self._invalidate_4k(cand[:64])
-        return IntervalResult(
-            counters=tlbsim.zero_counters(),
-            migrations=migrations,
-            evictions=evictions,
-            dirty_evictions=dirty_ev,
-            shootdowns=shootdowns,
-            **interval_costs(self.name, mc, migrations, evictions, dirty_ev,
-                             shootdowns),
-        )
-
-
-class Hscc2M(Policy):
-    """HSCC modified for 2 MB superpage migration (costly; paper's foil)."""
-
-    name = "hscc-2mb-mig"
-    kind = "sp2m"
-
-    def __init__(self, mc, trace0, seed=0):
-        super().__init__(mc, trace0, seed)
-        self.resident = np.zeros(self.num_sp, bool)
-        self.dirty = np.zeros(self.num_sp, bool)
-        self.max_slots = mc.dram_superpages
-
-    def residency(self, trace: Trace) -> np.ndarray:
-        return self.resident[trace.sp]
-
-    def migrate(self, trace: Trace, in_dram) -> IntervalResult:
-        mc = self.mc
-        reads = np.bincount(trace.sp[~trace.is_write], minlength=self.num_sp)
-        writes = np.bincount(trace.sp[trace.is_write], minlength=self.num_sp)
-        self.dirty |= self.resident & (writes > 0)
-        sp_mig_cost = mc.mig_page_cost * PAGES_PER_SP
-        benefit = (
-            (mc.t_nr - mc.t_dr) * reads + (mc.t_nw - mc.t_dw) * writes - sp_mig_cost
-        )
-        benefit[self.resident] = -np.inf
-        cand = np.argsort(-benefit)[:64]
-        cand = cand[benefit[cand] > mc.mig_threshold]
-
-        migrations = evictions = dirty_ev = 0
-        used = int(self.resident.sum())
-        free = self.max_slots - used
-        admit = cand[: max(free, 0)]
-        self.resident[admit] = True
-        migrations += len(admit)
-        rest = cand[max(free, 0):]
-        if len(rest):
-            res_idx = np.flatnonzero(self.resident)
-            cold = res_idx[np.argsort(reads[res_idx] + writes[res_idx])]
-            k = min(len(rest), len(cold))
-            victims = cold[:k]
-            gain_in = benefit[rest[:k]]
-            gain_out = (mc.t_nr - mc.t_dr) * reads[victims] + (
-                mc.t_nw - mc.t_dw
-            ) * writes[victims]
-            wb = np.where(self.dirty[victims], mc.writeback_page_cost * PAGES_PER_SP, 0)
-            ok = gain_in - gain_out - sp_mig_cost - wb > mc.mig_threshold
-            victims, incoming = victims[ok], rest[:k][ok]
-            self.resident[victims] = False
-            self.resident[incoming] = True
-            dirty_ev = int(self.dirty[victims].sum())
-            self.dirty[victims] = False
-            evictions = len(victims)
-            migrations += len(incoming)
-
-        shootdowns = migrations + evictions
-        return IntervalResult(
-            counters=tlbsim.zero_counters(),
-            migrations=migrations,
-            evictions=evictions,
-            dirty_evictions=dirty_ev,
-            shootdowns=shootdowns,
-            **interval_costs(self.name, mc, migrations, evictions, dirty_ev,
-                             shootdowns),
-        )
-
-
 class Rainbow(Policy):
     """The paper's system, driven by the shared core library."""
 
@@ -366,10 +232,11 @@ class Rainbow(Policy):
         )
 
 
+#: The eager oracle set. The HSCC policies exist ONLY as engine step
+#: programs (engine.simloop) — see the module docstring for the deletion
+#: rationale and scripts/validate_hscc_parity.py for the durable parity check.
 POLICY_CLASSES = {
     "flat-static": FlatStatic,
-    "hscc-4kb-mig": Hscc4K,
-    "hscc-2mb-mig": Hscc2M,
     "rainbow": Rainbow,
     "dram-only": DramOnly,
 }

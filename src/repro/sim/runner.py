@@ -13,8 +13,9 @@ Two execution paths produce SimMetrics:
                                asserts bit-identical metrics) and as the
                                baseline of benchmarks/engine_throughput.py.
 
-`sweep` vmaps the engine across seeds for each (app, policy) cell — the fleet
-axis is batched on device; apps/policies change shapes so the host loops them.
+`sweep` declares the (app x policy x seed) grid as an engine.fleet.SweepPlan
+and runs it through the mesh-sharded FleetRunner — same-shape cells fuse into
+one sharded fleet axis, trace staging double-buffers against the device scan.
 """
 from __future__ import annotations
 
@@ -63,7 +64,7 @@ class SimMetrics:
         return d
 
 
-def _finalize(
+def finalize_metrics(
     app: str,
     policy: str,
     mc: MachineConfig,
@@ -133,7 +134,7 @@ def _finalize(
     )
 
 
-def _totals_from_stats(
+def totals_from_stats(
     policy: str, mc: MachineConfig, stats, accesses_per_interval: int
 ) -> dict:
     """Accumulate engine per-interval stats in the eager path's order/dtypes."""
@@ -181,8 +182,8 @@ def simulate(
         counter_backend=counter_backend,
     )
     state, stats = simloop.engine_run(spec, simloop.engine_init(spec), chunks)
-    totals = _totals_from_stats(policy, mc, stats, meta["accesses_per_interval"])
-    return _finalize(
+    totals = totals_from_stats(policy, mc, stats, meta["accesses_per_interval"])
+    return finalize_metrics(
         app, policy, mc, totals, state.sim.counters,
         meta["inst_per_access"], meta["footprint_pages"],
     )
@@ -197,6 +198,12 @@ def simulate_eager(
     seed: int = 7,
 ) -> SimMetrics:
     """Pre-refactor host-looped reference path (one round-trip per interval)."""
+    if policy not in POLICY_CLASSES:
+        raise KeyError(
+            f"no eager reference for {policy!r}: the numpy HSCC host loops "
+            "were deleted after the engine ports passed exact full-table "
+            "parity (scripts/validate_hscc_parity.py); use the engine path"
+        )
     mc = mc or MachineConfig()
     trace0 = trace_mod.generate(app, seed, 0, accesses)
     pol = POLICY_CLASSES[policy](mc, trace0, seed)
@@ -217,7 +224,7 @@ def simulate_eager(
         totals["clflush_cycles"] += res.clflush_cycles
         totals["accesses"] += tr.sp.shape[0]
 
-    return _finalize(
+    return finalize_metrics(
         app, policy, mc, totals, pol.sim.counters,
         tr.inst_per_access, tr.footprint_pages,
     )
@@ -232,34 +239,21 @@ def sweep(
     accesses: int | None = None,
     counter_backend: str = "jax",
 ) -> dict[tuple[str, str, int], SimMetrics]:
-    """Fleet sweep: every (app x policy) cell, vmapping the engine over seeds.
+    """Fleet sweep: the (app x policy x seed) grid as ONE FleetRunner plan.
 
-    One compile + one device program per (app, policy); the seed axis is
-    batched (engine.simloop.sweep_seeds). Returns {(app, policy, seed): metrics}.
+    Cells sharing a compile signature are fused onto the fleet axis, sharded
+    across the device mesh, and double-buffered against host trace staging
+    (engine.fleet). Returns {(app, policy, seed): metrics}.
     """
-    from repro.engine import simloop  # lazy: sim.__init__ imports this module
+    from repro.engine import fleet  # lazy: sim.__init__ imports this module
 
-    mc = mc or MachineConfig()
-    out: dict[tuple[str, str, int], SimMetrics] = {}
-    for app in apps:
-        for policy in policies:
-            finals, stats, meta = simloop.sweep_seeds(
-                app, policy, mc, seeds, intervals, accesses,
-                counter_backend=counter_backend,
-            )
-            for i, seed in enumerate(seeds):
-                per_seed = type(stats)(*(np.asarray(x)[i] for x in stats))
-                totals = _totals_from_stats(
-                    policy, mc, per_seed, meta["accesses_per_interval"]
-                )
-                counters = type(finals.sim.counters)(
-                    *(np.asarray(x)[i] for x in finals.sim.counters)
-                )
-                out[(app, policy, seed)] = _finalize(
-                    app, policy, mc, totals, counters,
-                    meta["inst_per_access"], meta["footprint_pages"],
-                )
-    return out
+    plan = fleet.SweepPlan.grid(
+        apps, policies, tuple(seeds), mc=mc or MachineConfig(),
+        intervals=intervals, accesses=accesses,
+        counter_backend=counter_backend,
+    )
+    result = fleet.FleetRunner().run(plan)
+    return {(c.app, c.policy, c.seed): m for c, m in result.items()}
 
 
 def workloads(include_mixes: bool = True) -> list[str]:

@@ -182,3 +182,33 @@ def generate(name: str, seed: int, interval: int, accesses: int | None = None) -
         per_app = (accesses // len(MIXES[name])) if accesses else None
         return generate_mix(name, seed, interval, per_app)
     return generate_interval(APPS[name], seed, interval, accesses)
+
+
+def probe_meta(name: str, accesses: int | None = None) -> dict:
+    """Shape metadata of `generate(name, ...)` WITHOUT materializing accesses.
+
+    Seed/interval-invariant by construction (footprints and access counts are
+    profile-derived), so fleet schedulers can group compatible cells before any
+    trace generation happens. Keys match engine.simloop.make_chunks meta.
+    """
+
+    def one(prof: AppProfile, a: int | None) -> tuple[int, int, int, float]:
+        fp = _mb_to_pages(prof.footprint_mb)
+        nsp = (fp + PAGES_PER_SP - 1) // PAGES_PER_SP
+        return fp, nsp, a or prof.accesses_per_interval, prof.inst_per_access
+
+    if name in MIXES:
+        per_app = (accesses // len(MIXES[name])) if accesses else None
+        parts = [one(APPS[m], per_app) for m in MIXES[name]]
+        fp = sum(p[0] for p in parts)
+        nsp = sum(p[1] for p in parts)
+        a = sum(p[2] for p in parts)
+        ipa = float(np.mean([p[3] for p in parts]))
+    else:
+        fp, nsp, a, ipa = one(APPS[name], accesses)
+    return {
+        "num_superpages": nsp,
+        "footprint_pages": fp,
+        "inst_per_access": ipa,
+        "accesses_per_interval": a,
+    }

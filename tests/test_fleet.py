@@ -1,0 +1,175 @@
+"""FleetRunner (engine.fleet): sweep plans, grouping, sharding, staging.
+
+The load-bearing guarantee mirrors test_engine.py's: the mesh-sharded fleet
+path produces BIT-IDENTICAL results to the single-device engine — per cell,
+per field — including the padded (fleet % devices != 0) path, so scaling a
+parameter study across devices can never change a paper figure.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import repro.engine.simloop as simloop
+from repro.engine import fleet
+from repro.sim.config import MachineConfig
+from repro.sim.runner import simulate, sweep
+
+
+def test_plan_groups_by_compile_signature():
+    """Same-shape cells fuse; apps/configs/backends split; duplicates collapse."""
+    mc2 = MachineConfig(top_n=50)
+    plan = fleet.SweepPlan.grid(
+        ["streamcluster"], ["rainbow"], (1, 2), intervals=2, accesses=2000
+    ) + fleet.SweepPlan.grid(
+        ["soplex"], ["rainbow"], (1,), intervals=2, accesses=2000
+    ) + fleet.SweepPlan.grid(
+        ["streamcluster"], ["rainbow"], (1,), mc=mc2, intervals=2, accesses=2000
+    ) + fleet.SweepPlan.grid(  # exact duplicate of the first grid's seed 1
+        ["streamcluster"], ["rainbow"], (1,), intervals=2, accesses=2000
+    )
+    groups = fleet.plan_groups(plan)
+    assert [len(g.cells) for g in groups] == [2, 1, 1]
+    assert groups[0].spec.policy == "rainbow"
+    assert groups[0].meta["accesses_per_interval"] == 2000
+    assert groups[1].spec.footprint_pages != groups[0].spec.footprint_pages
+    assert groups[2].spec.mc.top_n == 50
+
+
+def test_fleet_matches_simulate_bit_identical():
+    """FleetRunner cell == unbatched simulate(), field for field."""
+    plan = fleet.SweepPlan.grid(
+        ["streamcluster", "soplex"], ["rainbow", "flat-static"], (3,),
+        intervals=2, accesses=2500,
+    )
+    res = fleet.FleetRunner().run(plan)
+    assert len(res) == 4
+    for cell in res:
+        single = simulate(cell.app, cell.policy, intervals=2, accesses=2500,
+                          seed=3)
+        got = res[cell]
+        assert got.migrations == single.migrations, cell.label
+        assert got.ipc == single.ipc, cell.label
+        assert got.mpki == single.mpki, cell.label
+        assert got.total_cycles == single.total_cycles, cell.label
+        assert got.mig_bytes == single.mig_bytes, cell.label
+
+
+def test_runner_sweep_is_fleet_backed():
+    """sim.runner.sweep routes through FleetRunner and keys by (app,policy,seed)."""
+    out = sweep(["streamcluster"], ["rainbow"], [1, 4], intervals=2,
+                accesses=2000)
+    single = simulate("streamcluster", "rainbow", intervals=2, accesses=2000,
+                      seed=4)
+    assert out[("streamcluster", "rainbow", 4)].ipc == single.ipc
+    assert out[("streamcluster", "rainbow", 4)].migrations == single.migrations
+
+
+def test_result_selection_and_tags():
+    plan = fleet.SweepPlan.grid(
+        ["streamcluster"], ["rainbow"], (1, 2), intervals=2, accesses=2000,
+        tags=(("sweep", "demo"),),
+    )
+    res = fleet.FleetRunner().run(plan)
+    assert res[("streamcluster", "rainbow", 2)].ipc > 0
+    with pytest.raises(KeyError, match="matched 2 cells"):  # seed ambiguous
+        res[("streamcluster", "rainbow")]
+    assert len(res.select(sweep="demo")) == 2
+    assert res.select(sweep="other") == []
+    rows = res.rows(seed=1)
+    assert len(rows) == 1 and rows[0]["sweep"] == "demo" and rows[0]["seed"] == 1
+    assert res.apps() == ["streamcluster"] and res.policies() == ["rainbow"]
+
+
+def test_sweep_seeds_meta_mismatch_raises(monkeypatch):
+    """Satellite fix: the fleet must not silently trust meta[0] per seed."""
+    real = simloop.trace_mod.generate
+
+    def skewed(app, seed, interval, accesses=None):
+        t = real(app, seed, interval, accesses)
+        if seed == 2:
+            t = dataclasses.replace(t, footprint_pages=t.footprint_pages + 7)
+        return t
+
+    monkeypatch.setattr(simloop.trace_mod, "generate", skewed)
+    with pytest.raises(ValueError, match="disagree on trace meta"):
+        simloop.sweep_seeds("streamcluster", "rainbow", MachineConfig(),
+                            [1, 2], intervals=1, accesses=1000)
+
+
+def test_require_uniform_meta_names_offender():
+    base = {"num_superpages": 4, "footprint_pages": 2048,
+            "accesses_per_interval": 1000, "inst_per_access": 9.0}
+    bad = dict(base, footprint_pages=4096)
+    with pytest.raises(ValueError, match=r"seed=9.*4096"):
+        simloop.require_uniform_meta([base, bad], ["seed=7", "seed=9"])
+
+
+def test_calibration_mode_matches_direct_stats():
+    from repro.sim import trace as trace_mod
+
+    plan = fleet.SweepPlan.grid(["streamcluster"], ["rainbow"])
+    got = fleet.FleetRunner().calibration(plan)[plan.cells[0]]
+    want = fleet.trace_calibration_stats(
+        trace_mod.generate("streamcluster", 7, interval=1)
+    )
+    assert got == want
+    assert 0 < got["hot_page_pct_measured"] <= 100
+
+
+def test_sharded_fleet_bit_identical_on_4_devices():
+    """4 forced host devices: shard_map fleet == single-device vmap, including
+    the non-divisible padding path (6 cells on 4 devices -> pad to 8)."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax
+        import numpy as np
+        import repro.engine.simloop as simloop
+        from repro.engine import fleet
+        from repro.sim.config import MachineConfig
+
+        assert len(jax.devices()) == 4
+        seeds = [0, 1, 2, 3, 4, 5]  # 6 cells: NOT divisible by 4 devices
+        plan = fleet.SweepPlan.grid(["streamcluster"], ["rainbow"],
+                                    tuple(seeds), intervals=2, accesses=2500)
+        runner = fleet.FleetRunner()
+        (group,) = fleet.plan_groups(plan)
+
+        # staged inputs must actually be sharded across all 4 devices
+        states, chunks = runner._stage(group)
+        assert len(chunks.sp.sharding.device_set) == 4, chunks.sp.sharding
+        assert chunks.sp.shape[0] == 8  # padded 6 -> 8
+
+        # raw engine outputs: sharded shard_map == single-device vmap, bitwise
+        finals_s, stats_s = fleet._sharded_fleet_fn(group.spec, runner.mesh)(
+            states, chunks)
+        finals_v, stats_v, meta = simloop.sweep_seeds(
+            "streamcluster", "rainbow", MachineConfig(), seeds,
+            intervals=2, accesses=2500)
+        for f_s, f_v in zip(stats_s, stats_v):
+            np.testing.assert_array_equal(np.asarray(f_s)[:6], np.asarray(f_v))
+        for c_s, c_v in zip(finals_s.sim.counters, finals_v.sim.counters):
+            np.testing.assert_array_equal(np.asarray(c_s)[:6], np.asarray(c_v))
+
+        # and the full metrics path agrees with the unbatched engine
+        res = runner.run(plan)
+        from repro.sim.runner import simulate
+        one = simulate("streamcluster", "rainbow", intervals=2,
+                       accesses=2500, seed=5)
+        got = res[("streamcluster", "rainbow", 5)]
+        assert got.ipc == one.ipc and got.migrations == one.migrations
+        assert got.total_cycles == one.total_cycles
+        print("FLEET_SHARDED_OK")
+    """)
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        env=env, cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert "FLEET_SHARDED_OK" in out.stdout, out.stderr[-2000:]
