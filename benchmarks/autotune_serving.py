@@ -1,0 +1,85 @@
+"""Engine-in-the-loop serving autotune: record a real decode mass trace, tune
+the ControlPolicy against it, and serve with the winner.
+
+The closed loop of the API redesign: `serving.rainbow_decode.record_mass_trace`
+captures the controller's access stream from a real (reduced-config) model run,
+`engine.autotune` replays candidate policies through the SAME engine.control
+path on zero-payload state, scores them with the "v5e-serving" cost model, and
+the winning policy plugs straight back into the decode step. Also asserts the
+vmap and mesh-sharded evaluation paths agree bit for bit.
+"""
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_reduced_config
+from repro.engine.autotune import TunePlan, autotune, evaluate
+from repro.memory.kvcache import PagedConfig, paged_init
+from repro.models import model as M
+from repro.serving.rainbow_decode import rainbow_decode_step, record_mass_trace
+
+
+def _timed_decode(cfg, pcfg, params, toks, S):
+    step = jax.jit(lambda p, t, k: rainbow_decode_step(cfg, pcfg, p, t, k))
+    kv = paged_init(cfg, pcfg, toks.shape[0], 1, cfg.num_layers)
+    logits, kv = step(params, toks[:, :1], kv)  # warmup/compile
+    jax.block_until_ready(logits)
+    t = time.time()
+    for i in range(1, S):
+        logits, kv = step(params, toks[:, i:i + 1], kv)
+    jax.block_until_ready(logits)
+    return (time.time() - t) / (S - 1), int((kv.remap.remap >= 0).sum())
+
+
+def run():
+    t0 = time.time()
+    cfg = get_reduced_config("qwen3-4b")
+    key = jax.random.PRNGKey(0)
+    B, S = 2, 32
+    pcfg = PagedConfig(block_size=4, blocks_per_seq=S // 4, hot_slots=8,
+                       top_n=4, max_promotions=8, interval_steps=8)
+    params = M.init_params(cfg, key, tp=1)
+    prompt = jax.random.randint(key, (B, S // 2), 0, cfg.vocab_size)
+
+    trace, _ = record_mass_trace(cfg, pcfg, params, prompt, steps=S)
+    plan = TunePlan.grid(
+        pcfg.policy, interval_steps=(2, 4, 8), threshold_init=(0.0, 64.0)
+    )
+    res = autotune(plan, trace)
+    assert res.improved, (
+        f"tuned policy must beat the serving default on the recorded trace "
+        f"(tuned {res.best_cost:.1f} vs default {res.baseline_cost:.1f})"
+    )
+    # bit-identity of the two evaluation paths on this real trace
+    cands = plan.candidates()
+    rows_v = evaluate(trace, cands, runner="vmap")
+    rows_s = evaluate(trace, cands, runner="sharded")
+    assert rows_v == rows_s, "vmap vs sharded evaluation diverged"
+
+    tuned_pcfg = PagedConfig(block_size=pcfg.block_size,
+                             blocks_per_seq=pcfg.blocks_per_seq,
+                             policy=res.tuned_policy())
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    ms_def, prom_def = _timed_decode(cfg, pcfg, params, toks, S)
+    ms_tuned, prom_tuned = _timed_decode(cfg, tuned_pcfg, params, toks, S)
+
+    rows = [{
+        "default_cost_per_step": round(res.baseline_cost, 1),
+        "tuned_cost_per_step": round(res.best_cost, 1),
+        "gain_pct": round(100 * (1 - res.best_cost / res.baseline_cost), 1),
+        "tuned_interval_steps": res.best.interval_steps,
+        "tuned_threshold_init": res.best.threshold_init,
+        "candidates": len(cands),
+        "default_ms_per_step": round(1000 * ms_def, 3),
+        "tuned_ms_per_step": round(1000 * ms_tuned, 3),
+        "default_promoted": prom_def,
+        "tuned_promoted": prom_tuned,
+    }]
+    emit("autotune_serving", rows, t0,
+         f"improved={res.improved} paths_bit_identical=True")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

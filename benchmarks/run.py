@@ -14,6 +14,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
+        autotune_serving,
         engine_throughput,
         fleet_throughput,
         paper_fig1_table12,
@@ -44,6 +45,7 @@ def main() -> None:
         engine_throughput,
         fleet_throughput,
         serving_rainbow,
+        autotune_serving,
         roofline,
     ]
     failed = []

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit
 from repro.configs import get_reduced_config
+from repro.engine.policy import get_policy
 from repro.memory.kvcache import PagedConfig, paged_init
 from repro.models import model as M
 from repro.serving.rainbow_decode import rainbow_decode_step
@@ -18,8 +19,13 @@ def run():
     cfg = get_reduced_config("qwen3-4b")
     key = jax.random.PRNGKey(0)
     B, S = 4, 64
-    pcfg = PagedConfig(block_size=8, blocks_per_seq=S // 8, hot_slots=16,
-                       top_n=4, max_promotions=8, interval_steps=8)
+    # controller knobs from the registered preset, resized to this geometry
+    # (the same ControlPolicy surface engine.autotune searches over)
+    pcfg = PagedConfig(
+        block_size=8, blocks_per_seq=S // 8,
+        policy=get_policy("serving-default").replace(
+            hot_slots=16, top_n=4, max_promotions=8, interval_steps=8),
+    )
     params = M.init_params(cfg, key, tp=1)
     toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
 

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_reduced_config
+from repro.engine.policy import get_policy
 from repro.memory.kvcache import PagedConfig, paged_init
 from repro.models import model as M
 from repro.serving.rainbow_decode import rainbow_decode_step
@@ -18,8 +19,13 @@ from repro.serving.steps import greedy_sample
 cfg = get_reduced_config("qwen3-4b")
 key = jax.random.PRNGKey(0)
 B, STEPS = 4, 48
-pcfg = PagedConfig(block_size=8, blocks_per_seq=STEPS // 8 + 1, hot_slots=12,
-                   top_n=4, max_promotions=8, interval_steps=8)
+# controller knobs come from the unified ControlPolicy surface (docs/policy.md);
+# `python -m repro.launch.serve --autotune` searches these engine-in-the-loop
+pcfg = PagedConfig(
+    block_size=8, blocks_per_seq=STEPS // 8 + 1,
+    policy=get_policy("serving-default").replace(
+        hot_slots=12, top_n=4, max_promotions=8, interval_steps=8),
+)
 params = M.init_params(cfg, key, tp=1)
 kv = paged_init(cfg, pcfg, B, 1, cfg.num_layers)
 cache = M.init_cache(cfg, B, STEPS + 8, tp=1)

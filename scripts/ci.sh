@@ -41,6 +41,34 @@ print(f"  sharded fleet: {len(res)} cells across {len(jax.devices())} devices, "
       "bit-identical to single-device engine")
 EOF
 
+echo "== autotune smoke: tuned ControlPolicy beats the default on a recorded trace =="
+python - <<'EOF'
+import jax
+from repro.configs import get_reduced_config
+from repro.engine.autotune import TunePlan, autotune, evaluate
+from repro.memory.kvcache import PagedConfig
+from repro.models import model as M
+from repro.serving.rainbow_decode import record_mass_trace
+
+cfg = get_reduced_config("qwen3-4b")
+key = jax.random.PRNGKey(0)
+B, S = 2, 16
+pcfg = PagedConfig(block_size=4, blocks_per_seq=S // 4, hot_slots=4,
+                   top_n=4, max_promotions=4, interval_steps=8)
+prompt = jax.random.randint(key, (B, 8), 0, cfg.vocab_size)
+params = M.init_params(cfg, key, tp=1)
+trace, _ = record_mass_trace(cfg, pcfg, params, prompt, steps=S)
+
+plan = TunePlan.grid(pcfg.policy, interval_steps=(2, 8))  # 2 candidates
+res = autotune(plan, trace)
+assert res.improved, f"tuned must beat default: {res.summary()}"
+cands = plan.candidates()
+assert evaluate(trace, cands, runner="vmap") == evaluate(
+    trace, cands, runner="sharded"), "vmap vs sharded evaluation diverged"
+print(f"  {res.summary()}")
+print("autotune smoke OK")
+EOF
+
 echo "== hscc parity: engine vs recorded full-table snapshot (spot check) =="
 python - <<'EOF'
 import json, pathlib

@@ -36,6 +36,53 @@ def make_timing(
     return TimingParams(f(t_nr), f(t_nw), f(t_dr), f(t_dw), f(t_mig), f(t_writeback))
 
 
+# -- named hardware presets (THE single source of both timing tables) --------
+
+#: Paper Table IV machine constants. sim.config re-exports these (CPU_GHZ /
+#: PAGE_BYTES) so the clock and page size that build the preset latencies are
+#: the same values the rest of the machine model derives from.
+SIM_CPU_GHZ = 3.2  # cycles = ns * GHz
+SIM_PAGE_BYTES = 4096
+_SIM_PAGE_COST = (
+    (SIM_PAGE_BYTES / 10.7e9) * 1e9 * SIM_CPU_GHZ * 2  # rd PCM + wr DRAM
+)
+
+#: Every hand-maintained latency table lives HERE, once. "paper-table4-sim" is
+#: the simulator's machine model (cycles @ 3.2 GHz; MachineConfig's latency
+#: defaults read these entries). "v5e-serving" is the serving cost model in
+#: ns-per-block units (819 GB/s HBM vs ~50 GB/s host link; t_mig = one block
+#: DMA + setup), consumed by memory.kvcache and engine.autotune.
+TIMING_PRESETS: dict[str, dict[str, float]] = {
+    "paper-table4-sim": {
+        "t_nr": 19.5 * SIM_CPU_GHZ,  # PCM read   = 62.4
+        "t_nw": 171.0 * SIM_CPU_GHZ,  # PCM write  = 547.2
+        "t_dr": 13.5 * SIM_CPU_GHZ,  # DRAM read  = 43.2
+        "t_dw": 28.5 * SIM_CPU_GHZ,  # DRAM write = 91.2
+        "t_mig": _SIM_PAGE_COST,
+        "t_writeback": _SIM_PAGE_COST,
+    },
+    "v5e-serving": {
+        "t_nr": 100.0,
+        "t_nw": 180.0,
+        "t_dr": 8.0,
+        "t_dw": 12.0,
+        "t_mig": 400.0,
+        "t_writeback": 400.0,
+    },
+}
+
+
+def preset_timing(name: str) -> TimingParams:
+    """TimingParams for a named hardware preset (see TIMING_PRESETS)."""
+    try:
+        return make_timing(**TIMING_PRESETS[name])
+    except KeyError:
+        raise KeyError(
+            f"unknown timing preset {name!r}; "
+            f"available: {sorted(TIMING_PRESETS)}"
+        ) from None
+
+
 def migration_benefit(c_r: jax.Array, c_w: jax.Array, t: TimingParams) -> jax.Array:
     """Eq. 1: cycles saved by serving (C_r, C_w) from DRAM instead of NVM."""
     return (t.t_nr - t.t_dr) * c_r + (t.t_nw - t.t_dw) * c_w - t.t_mig

@@ -20,7 +20,7 @@ meaning of "access" differs (post-LLC memory reference vs KV-block read).
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import TYPE_CHECKING, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -31,19 +31,90 @@ from repro.core.migration import DramState, MigrationPlan, TimingParams
 from repro.core.remap import RemapState
 from repro.utils import pytree_dataclass, static_field
 
+if TYPE_CHECKING:  # runtime import would cycle (see _control_cfg)
+    from repro.engine.policy import ControlPolicy
 
-@pytree_dataclass
+
+@pytree_dataclass(init=False)
 class RainbowConfig:
+    """Layer-A controller config: ControlPolicy + superpage geometry.
+
+    The controller knobs live on ONE surface (`engine.policy.ControlPolicy`);
+    this config only adds what is specific to the simulator's address space.
+    The pre-redesign flat knobs (`top_n`, `dram_slots`, `write_weight`,
+    `max_migrations_per_interval`, `counter_backend`) are kept as
+    deprecation-shim init kwargs + read-only properties, so existing call
+    sites (and `dataclasses.replace` on them) keep working.
+    """
+
     num_superpages: int = static_field(default=1024)
     pages_per_sp: int = static_field(default=512)
-    top_n: int = static_field(default=100)  # paper §IV-F: N = 100
-    dram_slots: int = static_field(default=4096)
-    write_weight: int = static_field(default=2)
-    max_migrations_per_interval: int = static_field(default=512)
-    # Counting backend: "jax" (saturating scatter-adds) or the fused one-pass
-    # kernel under kernels/page_counter ("ref" oracle / "pallas" TPU kernel /
-    # "interpret" Pallas-interpret). All are bit-identical; see engine.control.
-    counter_backend: str = static_field(default="jax")
+    policy: "ControlPolicy" = static_field(default=None)
+
+    def __init__(
+        self,
+        num_superpages: int = 1024,
+        pages_per_sp: int = 512,
+        top_n: int | None = None,
+        dram_slots: int | None = None,
+        write_weight: int | None = None,
+        max_migrations_per_interval: int | None = None,
+        counter_backend: str | None = None,
+        policy=None,
+    ):
+        from repro.engine.policy import ControlPolicy
+
+        if policy is None:
+            # paper §IV-F defaults (N = 100); interval_steps = 1: Layer A
+            # closes the controller once per trace chunk
+            policy = ControlPolicy(
+                interval_steps=1, top_n=100, max_promotions=512,
+                hot_slots=4096, write_weight=2,
+            )
+        legacy = {
+            "top_n": top_n,
+            "hot_slots": dram_slots,
+            "write_weight": write_weight,
+            "max_promotions": max_migrations_per_interval,
+            "counter_backend": counter_backend,
+        }
+        overrides = {k: v for k, v in legacy.items() if v is not None}
+        if overrides:
+            policy = dataclasses.replace(policy, **overrides)
+        object.__setattr__(self, "num_superpages", num_superpages)
+        object.__setattr__(self, "pages_per_sp", pages_per_sp)
+        object.__setattr__(self, "policy", policy.validate("RainbowConfig"))
+        self.validate()
+
+    def validate(self) -> "RainbowConfig":
+        if self.num_superpages < 1 or self.pages_per_sp < 1:
+            raise ValueError(
+                "RainbowConfig: num_superpages and pages_per_sp must be >= 1 "
+                f"(got {self.num_superpages}, {self.pages_per_sp})"
+            )
+        return self
+
+    # -- deprecation shims (old flat-knob surface) --------------------------
+
+    @property
+    def top_n(self) -> int:
+        return self.policy.top_n
+
+    @property
+    def dram_slots(self) -> int:
+        return self.policy.hot_slots
+
+    @property
+    def write_weight(self) -> int:
+        return self.policy.write_weight
+
+    @property
+    def max_migrations_per_interval(self) -> int:
+        return self.policy.max_promotions
+
+    @property
+    def counter_backend(self) -> str:
+        return self.policy.counter_backend
 
 
 @pytree_dataclass
@@ -81,19 +152,18 @@ def _control_cfg(cfg: RainbowConfig):
     # here would cycle on first import of either package.
     from repro.engine import control
 
-    return control, control.ControlConfig(
-        num_units=cfg.num_superpages,
-        pages_per_unit=cfg.pages_per_sp,
-        top_n=cfg.top_n,
-        max_moves=cfg.max_migrations_per_interval,
-        write_weight=cfg.write_weight,
-        counter_backend=cfg.counter_backend,
+    return control, cfg.policy.control_config(
+        num_units=cfg.num_superpages, pages_per_unit=cfg.pages_per_sp
     )
 
 
-def rainbow_init(cfg: RainbowConfig, threshold: float = 0.0) -> RainbowState:
+def rainbow_init(cfg: RainbowConfig, threshold: float | None = None) -> RainbowState:
+    """Fresh controller state; `threshold` defaults to the policy's
+    threshold_init (the explicit argument remains as an override shim)."""
     from repro.core import remap as remap_mod
 
+    if threshold is None:
+        threshold = cfg.policy.threshold_init
     return RainbowState(
         s1=counting.stage1_init(cfg.num_superpages),
         s2_reads=counting.stage2_init(cfg.top_n, cfg.pages_per_sp),

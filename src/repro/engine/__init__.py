@@ -9,8 +9,15 @@ One interval controller (`engine.control`) and one scanned interval loop
   * Layer B — the serving runtime (`memory.kvcache.end_interval_promote` plans
     promotions through the same `control.plan_and_apply`).
 
-Import discipline: `control` only depends on `repro.core` leaf modules and is
-imported eagerly; `simloop` depends on `repro.sim` and is loaded lazily (PEP
+The knobs of that controller live on ONE declarative surface —
+`engine.policy.ControlPolicy` plus its `@register_policy` preset registry —
+which `RainbowConfig` (Layer A) and `PagedConfig` (Layer B) compose with their
+layer-specific geometry, and which `engine.autotune` searches over with
+engine-in-the-loop evaluation against recorded decode attention-mass traces.
+
+Import discipline: `control` and `policy` only depend on `repro.core` leaf
+modules / `repro.utils` and are imported eagerly; `simloop`, `fleet`, and
+`autotune` depend on `repro.sim` / `repro.memory` and are loaded lazily (PEP
 562) so that `repro.sim.__init__` -> `sim.runner` -> engine does not cycle.
 """
 from __future__ import annotations
@@ -22,20 +29,33 @@ from repro.engine.control import (
     plan_and_apply,
     rotate_monitors,
 )
+from repro.engine.policy import (
+    ControlPolicy,
+    available_policies,
+    get_policy,
+    register_policy,
+    resolve_policy,
+)
 
 __all__ = [
     "ControlConfig",
+    "ControlPolicy",
     "PlanOutcome",
+    "available_policies",
+    "get_policy",
     "observe_tiers",
     "plan_and_apply",
+    "register_policy",
+    "resolve_policy",
     "rotate_monitors",
     "simloop",
     "fleet",
+    "autotune",
 ]
 
 
 def __getattr__(name):  # lazy: these pull in repro.sim (see module docstring)
-    if name in ("simloop", "fleet"):
+    if name in ("simloop", "fleet", "autotune"):
         import importlib
 
         return importlib.import_module(f"repro.engine.{name}")

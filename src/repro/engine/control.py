@@ -38,8 +38,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.counting import (
+    COUNTER_MAX,
     Stage1State,
     Stage2State,
+    counter_value,
     saturating_merge,
     select_top_n,
     stage1_init,
@@ -76,6 +78,11 @@ class ControlConfig:
     max_moves: int = static_field(default=512)
     write_weight: int = static_field(default=2)
     counter_backend: str = static_field(default="jax")
+    # Stage-1 retention across interval rotation: 0.0 is the paper's full
+    # reset (bit-identical default); (0, 1) keeps a decayed heat history so
+    # slowly-warming units survive the rotation (engine.policy.ControlPolicy
+    # exposes this as `counter_decay`).
+    counter_decay: float = static_field(default=0.0)
 
 
 class PlanOutcome(NamedTuple):
@@ -221,6 +228,16 @@ def rotate_monitors(
 
     The next interval's stage-2 monitors are this interval's stage-1 top-N
     (history-based, paper step (2)); DRAM per-interval slot stats are zeroed.
+    With `counter_decay` > 0 stage-1 keeps a decayed heat history instead of a
+    full reset (the overflow bit is re-derived from the decayed value, so a
+    "definitely hot" unit cools off over idle intervals).
     """
     new_psn, _ = select_top_n(s1, cfg.top_n)
-    return stage1_init(cfg.num_units), new_psn, dram_new_interval(dram)
+    if cfg.counter_decay > 0.0:
+        kept = counter_value(s1.counts).astype(jnp.float32) * cfg.counter_decay
+        new_s1 = Stage1State(
+            counts=jnp.minimum(kept, COUNTER_MAX).astype(jnp.uint16)
+        )
+    else:
+        new_s1 = stage1_init(cfg.num_units)
+    return new_s1, new_psn, dram_new_interval(dram)

@@ -37,6 +37,11 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 import repro.engine.simloop as simloop
+from repro.engine.policy import (
+    SIM_POLICY_PRESETS,
+    ControlPolicy,
+    resolve_policy,
+)
 from repro.launch.mesh import make_fleet_mesh
 from repro.launch.sharding import batch_shardings
 from repro.sim import trace as trace_mod
@@ -48,7 +53,13 @@ Tags = tuple[tuple[str, Any], ...]
 
 @dataclasses.dataclass(frozen=True)
 class SweepCell:
-    """One simulation of the sweep grid (hashable: it IS the result key)."""
+    """One simulation of the sweep grid (hashable: it IS the result key).
+
+    `control` overrides the controller knobs of the stateful policies with a
+    ControlPolicy (the unified surface of engine.policy) — sweeps over
+    (interval_steps, top_n, threshold_init, ...) declare policies natively
+    instead of patching raw MachineConfig dicts.
+    """
 
     app: str
     policy: str
@@ -57,6 +68,7 @@ class SweepCell:
     intervals: int = 5
     accesses: int | None = None
     counter_backend: str = "jax"
+    control: ControlPolicy | None = None
     tags: Tags = ()
 
     @property
@@ -84,13 +96,43 @@ class SweepPlan:
         intervals: int = 5,
         accesses: int | None = None,
         counter_backend: str = "jax",
+        policy: ControlPolicy | str | None = None,
         tags: Tags = (),
     ) -> "SweepPlan":
-        """The dense (apps x policies x seeds) grid at one machine config."""
+        """The dense (apps x policies x seeds) grid at one machine config.
+
+        `policy` (a ControlPolicy or a registered preset name) overrides the
+        stateful policies' controller knobs for every cell of the grid — the
+        native way to sweep (interval_steps, top_n, threshold_init, ...)
+        without patching MachineConfig. Because one override's knobs are in
+        one policy kind's units (e.g. hscc-2mb hot_slots counts superpages),
+        grids mixing several stateful kinds reject an override; declare one
+        grid per kind and `+` them. The override's counter_backend is
+        authoritative over the `counter_backend` argument.
+        """
         mc = mc or MachineConfig()
+        control = None
+        if policy is not None:
+            stateful = {p for p in policies if p in SIM_POLICY_PRESETS}
+            if len(stateful) > 1:
+                raise ValueError(
+                    "SweepPlan.grid: one `policy` override cannot apply to "
+                    f"multiple stateful policy kinds {sorted(stateful)} — "
+                    "their knobs use different units (hscc-2mb counts "
+                    "superpage slots, rainbow/hscc-4kb count 4KB pages); "
+                    "declare one grid per kind and add the plans"
+                )
+            control = resolve_policy(policy, "sim-rainbow", mc=mc)
+            if counter_backend not in ("jax", control.counter_backend):
+                raise ValueError(
+                    "SweepPlan.grid: conflicting counter_backend "
+                    f"({counter_backend!r} argument vs "
+                    f"{control.counter_backend!r} on the policy override) — "
+                    "set it on the ControlPolicy"
+                )
         return SweepPlan(tuple(
             SweepCell(a, p, s, mc, intervals, accesses, counter_backend,
-                      tuple(tags))
+                      control, tuple(tags))
             for a in apps for p in policies for s in seeds
         ))
 
@@ -136,6 +178,7 @@ def plan_groups(plan: SweepPlan) -> list[FleetGroup]:
             num_superpages=meta["num_superpages"],
             footprint_pages=meta["footprint_pages"],
             counter_backend=cell.counter_backend,
+            control=cell.control,
         )
         key = (spec, cell.intervals, meta["accesses_per_interval"],
                meta["inst_per_access"])

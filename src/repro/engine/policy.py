@@ -1,0 +1,275 @@
+"""ControlPolicy: the ONE declarative policy surface of the interval controller.
+
+Before this module the controller's knobs lived on three disjoint surfaces —
+`core.rainbow.RainbowConfig` (Layer A), `memory.kvcache.PagedConfig` (Layer B),
+and hand-rolled argparse in `launch/serve.py` — so every consumer redeclared
+(interval_steps, top_n, max_promotions, ...) with its own names and defaults.
+`ControlPolicy` is the single frozen pytree-dataclass holding exactly the
+interval-controller knobs of §III-B/C; both layers' configs are thin
+compositions of a ControlPolicy plus layer-specific geometry:
+
+  RainbowConfig = ControlPolicy + (num_superpages, pages_per_sp)
+  PagedConfig   = ControlPolicy + (block_size, blocks_per_seq, quantize)
+
+and `engine.autotune` searches over ControlPolicy fields directly.
+
+A tiny registry (`@register_policy` / `get_policy`) names the presets every
+entry point constructs its controller from: the paper's §IV-F simulator
+parameters, the HSCC baselines' admission shapes, and the v5e-class serving
+defaults. Factories may consume a `MachineConfig` (Layer A knobs are machine
+properties there); `get_policy(name, **kw)` resolves either form and validates.
+
+Field mapping to the old surfaces (kept as deprecation-shim properties):
+
+  hot_slots       <- RainbowConfig.dram_slots / PagedConfig.hot_slots
+  max_promotions  <- RainbowConfig.max_migrations_per_interval /
+                     PagedConfig.max_promotions / the HSCC ports' cand_k
+  threshold_init  <- the `threshold` argument of rainbow_init /
+                     MachineConfig.mig_threshold
+  interval_steps  <- PagedConfig.interval_steps (Layer A runs one controller
+                     close per trace chunk, i.e. interval_steps = 1)
+  counter_decay   <- new (§III-B extension): fraction of each stage-1 counter
+                     retained across interval rotation (0.0 = the paper's full
+                     reset; bit-identical default)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.utils import pytree_dataclass, static_field
+
+#: Counting backends accepted by engine.control (see its module docstring).
+COUNTER_BACKENDS = ("jax", "ref", "pallas", "interpret")
+
+
+@pytree_dataclass
+class ControlPolicy:
+    """Interval-controller knobs, layer-agnostic (all static: a policy is part
+    of the compile signature, like the geometry it composes with).
+
+    interval_steps   observe batches per monitoring interval (Layer B decode
+                     steps; Layer A closes every chunk, i.e. 1)
+    top_n            stage-2 monitor rows (hot superpages / superblocks)
+    max_promotions   per-interval migration-plan size K (fixed shapes)
+    hot_slots        performance-tier capacity in pages/blocks (DRAM slots /
+                     HBM hot-pool blocks)
+    write_weight     stage-1 weighting of NVM writes vs reads (§III-B)
+    threshold_init   initial adaptive admission threshold (§III-C)
+    counter_decay    stage-1 retention across interval rotation in [0, 1);
+                     0.0 reproduces the paper's per-interval counter reset
+    counter_backend  "jax" scatter-adds or the fused page_counter kernel
+                     ("ref" | "pallas" | "interpret")
+    """
+
+    interval_steps: int = static_field(default=8)
+    top_n: int = static_field(default=16)
+    max_promotions: int = static_field(default=64)
+    hot_slots: int = static_field(default=256)
+    write_weight: int = static_field(default=2)
+    threshold_init: float = static_field(default=0.0)
+    counter_decay: float = static_field(default=0.0)
+    counter_backend: str = static_field(default="jax")
+
+    # -- validation (satellite: impossible geometries fail loudly) ----------
+
+    def validate(self, context: str = "ControlPolicy") -> "ControlPolicy":
+        """Reject impossible knob settings with a clear error, returning self.
+
+        Geometry-dependent checks (e.g. top_n vs blocks_per_seq) live on the
+        composing config's validate; everything knowable here is checked here.
+        """
+        if self.interval_steps < 1:
+            raise ValueError(
+                f"{context}: interval_steps must be >= 1 (got "
+                f"{self.interval_steps}); the controller closes an interval "
+                "after that many observe batches"
+            )
+        if self.top_n < 1:
+            raise ValueError(f"{context}: top_n must be >= 1 (got {self.top_n})")
+        if self.max_promotions < 1:
+            raise ValueError(
+                f"{context}: max_promotions must be >= 1 (got "
+                f"{self.max_promotions})"
+            )
+        if self.hot_slots < 1:
+            raise ValueError(
+                f"{context}: hot_slots must be >= 1 (got {self.hot_slots})"
+            )
+        if self.write_weight < 1:
+            raise ValueError(
+                f"{context}: write_weight must be >= 1 (got {self.write_weight})"
+            )
+        if not 0.0 <= self.counter_decay < 1.0:
+            raise ValueError(
+                f"{context}: counter_decay must be in [0, 1) (got "
+                f"{self.counter_decay}); 1.0 would never forget stage-1 heat"
+            )
+        if self.counter_backend not in COUNTER_BACKENDS:
+            raise ValueError(
+                f"{context}: unknown counter_backend "
+                f"{self.counter_backend!r}; expected one of {COUNTER_BACKENDS}"
+            )
+        return self
+
+    # -- composition --------------------------------------------------------
+
+    def replace(self, **overrides: Any) -> "ControlPolicy":
+        """dataclasses.replace + validate (the idiom TunePlan candidates use)."""
+        return dataclasses.replace(self, **overrides).validate()
+
+    def control_config(self, num_units: int, pages_per_unit: int):
+        """The engine-internal ControlConfig for one controller instance.
+
+        This is THE construction both layers go through: Layer A passes
+        (num_superpages, pages_per_sp), Layer B (batch, blocks_per_seq).
+        """
+        from repro.engine.control import ControlConfig
+
+        return ControlConfig(
+            num_units=num_units,
+            pages_per_unit=pages_per_unit,
+            top_n=self.top_n,
+            max_moves=self.max_promotions,
+            write_weight=self.write_weight,
+            counter_backend=self.counter_backend,
+            counter_decay=self.counter_decay,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+PolicyFactory = Callable[..., ControlPolicy]
+_REGISTRY: dict[str, PolicyFactory] = {}
+
+
+def register_policy(name: str) -> Callable[[PolicyFactory], PolicyFactory]:
+    """Register a named ControlPolicy factory (decorator).
+
+    Factories take keyword arguments only (commonly `mc=` for Layer A presets
+    whose knobs are MachineConfig properties) and return a ControlPolicy.
+    """
+
+    def deco(fn: PolicyFactory) -> PolicyFactory:
+        if name in _REGISTRY:
+            raise ValueError(f"policy {name!r} is already registered")
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def get_policy(name: str, **kwargs: Any) -> ControlPolicy:
+    """Resolve a registered preset to a validated ControlPolicy."""
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown policy preset {name!r}; registered: {available_policies()}"
+        ) from None
+    return factory(**kwargs).validate()
+
+
+def resolve_policy(policy: "ControlPolicy | str | None", default: str,
+                   **kwargs: Any) -> ControlPolicy:
+    """Accept a ControlPolicy, a preset name, or None (-> `default` preset)."""
+    if policy is None:
+        return get_policy(default, **kwargs)
+    if isinstance(policy, str):
+        return get_policy(policy, **kwargs)
+    return policy.validate()
+
+
+def available_policies() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# Presets: every entry point's controller comes from one of these
+# ---------------------------------------------------------------------------
+
+
+@register_policy("serving-default")
+def _serving_default(**_: Any) -> ControlPolicy:
+    """Layer B defaults (the former PagedConfig field defaults)."""
+    return ControlPolicy()
+
+
+@register_policy("sim-rainbow")
+def _sim_rainbow(mc=None) -> ControlPolicy:
+    """Paper §IV-F simulator parameters, read off a MachineConfig.
+
+    Layer A closes the controller once per trace chunk -> interval_steps = 1.
+    """
+    mc = mc or _machine_config()
+    return ControlPolicy(
+        interval_steps=1,
+        top_n=mc.top_n,
+        max_promotions=512,
+        hot_slots=mc.dram_pages,
+        write_weight=mc.write_weight,
+        threshold_init=mc.mig_threshold,
+    )
+
+
+@register_policy("hscc-4kb")
+def _hscc_4kb(mc=None) -> ControlPolicy:
+    """HSCC 4KB-migration baseline: per-page admission, cand_k = 512."""
+    mc = mc or _machine_config()
+    return ControlPolicy(
+        interval_steps=1,
+        top_n=mc.top_n,
+        max_promotions=512,
+        hot_slots=mc.dram_pages,
+        write_weight=1,
+        threshold_init=mc.mig_threshold,
+    )
+
+
+@register_policy("hscc-2mb")
+def _hscc_2mb(mc=None) -> ControlPolicy:
+    """HSCC 2MB-migration baseline: per-superpage admission, cand_k = 64."""
+    mc = mc or _machine_config()
+    return ControlPolicy(
+        interval_steps=1,
+        top_n=mc.top_n,
+        max_promotions=64,
+        hot_slots=mc.dram_superpages,
+        write_weight=1,
+        threshold_init=mc.mig_threshold,
+    )
+
+
+def _machine_config():
+    # Lazy: repro.sim imports sim.runner -> sim.policies -> repro.engine, so a
+    # module-level sim.config import here would cycle on `import repro.engine`.
+    from repro.sim.config import MachineConfig
+
+    return MachineConfig()
+
+
+#: EngineSpec.policy -> registry preset for the simulator's stateful policies.
+SIM_POLICY_PRESETS = {
+    "rainbow": "sim-rainbow",
+    "hscc-4kb-mig": "hscc-4kb",
+    "hscc-2mb-mig": "hscc-2mb",
+}
+
+
+def sim_policy_for(policy: str, mc, control: ControlPolicy | None = None,
+                   counter_backend: str | None = None) -> ControlPolicy:
+    """The effective ControlPolicy of one simulator cell.
+
+    An explicit `control` override (SweepCell / autotune) is authoritative,
+    INCLUDING its counter_backend — the cell-level `counter_backend` axis only
+    applies to machine-preset policies (otherwise a cell's default "jax" would
+    silently clobber a backend the caller set on the override).
+    """
+    if control is not None:
+        return control.validate()
+    pol = get_policy(SIM_POLICY_PRESETS[policy], mc=mc)
+    if counter_backend is not None and counter_backend != pol.counter_backend:
+        pol = dataclasses.replace(pol, counter_backend=counter_backend)
+    return pol.validate()

@@ -39,6 +39,7 @@ import numpy as np
 from repro.core import rainbow as rb
 from repro.core.remap import translate
 from repro.core.tlb import SplitTLB, tlb_invalidate
+from repro.engine.policy import ControlPolicy, sim_policy_for
 from repro.sim import tlbsim
 from repro.sim import trace as trace_mod
 from repro.sim.config import PAGES_PER_SP, MachineConfig
@@ -57,7 +58,12 @@ POLICY_KINDS = {
 
 @dataclasses.dataclass(frozen=True)
 class EngineSpec:
-    """Static configuration of one engine compile (hashable; jit static arg)."""
+    """Static configuration of one engine compile (hashable; jit static arg).
+
+    `control` overrides the machine-derived ControlPolicy of the stateful
+    policies (rainbow / HSCC ports) — the hook SweepPlan cells and the serving
+    autotuner use to sweep controller knobs without touching MachineConfig.
+    """
 
     policy: str
     mc: MachineConfig
@@ -65,6 +71,13 @@ class EngineSpec:
     footprint_pages: int
     counter_backend: str = "jax"  # rainbow counting: "jax"|"ref"|"pallas"|"interpret"
     max_invalidate: int = 256  # 4KB-TLB shootdowns applied per interval (eager cap)
+    control: ControlPolicy | None = None
+
+    def control_policy(self) -> ControlPolicy:
+        """The effective ControlPolicy of this compile (stateful policies)."""
+        return sim_policy_for(
+            self.policy, self.mc, self.control, self.counter_backend
+        )
 
 
 class TraceChunks(NamedTuple):
@@ -248,18 +261,16 @@ def _rainbow_cfg(spec: EngineSpec) -> rb.RainbowConfig:
     return rb.RainbowConfig(
         num_superpages=spec.num_superpages,
         pages_per_sp=PAGES_PER_SP,
-        top_n=spec.mc.top_n,
-        dram_slots=spec.mc.dram_pages,
-        write_weight=spec.mc.write_weight,
-        max_migrations_per_interval=512,
-        counter_backend=spec.counter_backend,
+        policy=spec.control_policy(),
     )
 
 
 def engine_init(spec: EngineSpec) -> EngineState:
     sim = tlbsim.init_state(spec.mc)
     if spec.policy == "rainbow":
-        pol: Any = rb.rainbow_init(_rainbow_cfg(spec), threshold=spec.mc.mig_threshold)
+        # threshold comes from the policy's threshold_init (mc.mig_threshold
+        # for the default preset; an EngineSpec.control override wins)
+        pol: Any = rb.rainbow_init(_rainbow_cfg(spec))
     elif spec.policy == "hscc-4kb-mig":
         pol = HsccPolicyState(
             resident=jnp.zeros((spec.footprint_pages,), bool),
@@ -306,6 +317,7 @@ def _hscc_admit(
     cand_k: int,
     unit_mig_cost: float,
     unit_writeback: float,
+    threshold: float,
 ):
     """Fixed-shape HSCC admission: free slots best-first, then swap vs coldest.
 
@@ -324,7 +336,7 @@ def _hscc_admit(
     benefit = jnp.where(resident, -jnp.inf, benefit)
     k = min(cand_k, n)
     b_top, cand = jax.lax.top_k(benefit, k)
-    ok = b_top > mc.mig_threshold
+    ok = b_top > threshold
 
     rank = jnp.cumsum(ok.astype(jnp.int32)) - 1  # rank among admitted lanes
     admit_free = ok & (rank < free)
@@ -342,7 +354,7 @@ def _hscc_admit(
     vic_ok = resident[vic] & rest
     gain_out = (mc.t_nr - mc.t_dr) * reads[vic] + (mc.t_nw - mc.t_dw) * writes[vic]
     wb = jnp.where(dirty[vic], unit_writeback, 0.0)
-    ok2 = vic_ok & (b_top - gain_out - unit_mig_cost - wb > mc.mig_threshold)
+    ok2 = vic_ok & (b_top - gain_out - unit_mig_cost - wb > threshold)
 
     resident = resident.at[jnp.where(ok2, vic, n)].set(False, mode="drop")
     resident = resident.at[jnp.where(ok2, cand, n)].set(True, mode="drop")
@@ -361,14 +373,16 @@ def _hscc_admit(
 
 def _hscc4k_migrate(spec: EngineSpec, pol: HsccPolicyState, chunk):
     mc, fp = spec.mc, spec.footprint_pages
+    cpol = spec.control_policy()  # "hscc-4kb" preset unless overridden
     vpn = jnp.minimum(chunk.vpn, fp - 1)
     reads, writes = _histograms(vpn, chunk.is_write, fp)
     dirty = pol.dirty | (pol.resident & (writes > 0))
-    free = jnp.maximum(mc.dram_pages - pol.slots_used, 0)
+    free = jnp.maximum(cpol.hot_slots - pol.slots_used, 0)
     resident, dirty, n_free, stats, cand, ok = _hscc_admit(
         mc, pol.resident, dirty, reads, writes, free,
-        cand_k=512, unit_mig_cost=mc.mig_page_cost,
+        cand_k=cpol.max_promotions, unit_mig_cost=mc.mig_page_cost,
         unit_writeback=mc.writeback_page_cost,
+        threshold=cpol.threshold_init,
     )
     pol = HsccPolicyState(
         resident=resident, dirty=dirty, slots_used=pol.slots_used + n_free
@@ -379,13 +393,15 @@ def _hscc4k_migrate(spec: EngineSpec, pol: HsccPolicyState, chunk):
 
 def _hscc2m_migrate(spec: EngineSpec, pol: HsccPolicyState, chunk):
     mc, nsp = spec.mc, spec.num_superpages
+    cpol = spec.control_policy()  # "hscc-2mb" preset unless overridden
     reads, writes = _histograms(chunk.sp, chunk.is_write, nsp)
     dirty = pol.dirty | (pol.resident & (writes > 0))
-    free = jnp.maximum(mc.dram_superpages - pol.resident.sum().astype(jnp.int32), 0)
+    free = jnp.maximum(cpol.hot_slots - pol.resident.sum().astype(jnp.int32), 0)
     resident, dirty, _, stats, _, _ = _hscc_admit(
         mc, pol.resident, dirty, reads, writes, free,
-        cand_k=64, unit_mig_cost=mc.mig_page_cost * PAGES_PER_SP,
+        cand_k=cpol.max_promotions, unit_mig_cost=mc.mig_page_cost * PAGES_PER_SP,
         unit_writeback=mc.writeback_page_cost * PAGES_PER_SP,
+        threshold=cpol.threshold_init,
     )
     return HsccPolicyState(resident=resident, dirty=dirty, slots_used=pol.slots_used), stats, None
 

@@ -2,6 +2,13 @@
 
 ``PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --kv paged --tokens 64``
+
+The paged path's controller knobs come from the unified ControlPolicy surface
+(engine.policy): pick a registered preset with ``--policy`` and override
+individual knobs with ``--interval-steps/--top-n/--hot-slots/--max-promotions``.
+``--autotune`` records the decode attention-mass trace of a short pilot run,
+searches (interval_steps, threshold_init) engine-in-the-loop against it
+(engine.autotune), and serves with the winning policy.
 """
 from __future__ import annotations
 
@@ -12,10 +19,40 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, get_reduced_config
+from repro.engine.policy import available_policies, get_policy
 from repro.memory.kvcache import PagedConfig, paged_init
 from repro.models import model as M
-from repro.serving.rainbow_decode import rainbow_decode_step
+from repro.serving.rainbow_decode import rainbow_decode_step, record_mass_trace
 from repro.serving.steps import greedy_sample
+
+
+def build_paged_config(args, nblk: int) -> PagedConfig:
+    """One PagedConfig from (preset, CLI overrides, geometry-aware defaults).
+
+    Precedence: explicit CLI flags > the chosen --policy preset. Geometry-aware
+    fallbacks (hot pool sized to the sequence) only apply to the generic
+    "serving-default" preset — a named preset's knobs are exactly what its
+    author registered.
+    """
+    policy = get_policy(args.policy)
+    overrides = {
+        k: v for k, v in {
+            "hot_slots": args.hot_slots,
+            "top_n": args.top_n,
+            "max_promotions": args.max_promotions,
+            "interval_steps": args.interval_steps,
+        }.items() if v is not None
+    }
+    if args.policy == "serving-default":
+        hot = overrides.get("hot_slots", max(8, nblk // 2))
+        overrides.setdefault("hot_slots", hot)
+        overrides.setdefault("top_n", min(8, nblk))
+        overrides.setdefault("max_promotions", min(16, hot))
+    return PagedConfig(
+        block_size=args.block_size,
+        blocks_per_seq=nblk,
+        policy=policy.replace(**overrides) if overrides else policy,
+    )
 
 
 def main() -> None:
@@ -27,11 +64,47 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--block-size", type=int, default=8)
+    # -- unified ControlPolicy knobs (paged path) --
+    ap.add_argument("--policy", default="serving-default",
+                    help=f"registered preset, one of {available_policies()}")
+    ap.add_argument("--interval-steps", type=int, default=None,
+                    help="decode steps per monitoring interval")
+    ap.add_argument("--top-n", type=int, default=None,
+                    help="stage-2 monitored superblocks")
+    ap.add_argument("--hot-slots", type=int, default=None,
+                    help="hot-pool capacity in KV blocks")
+    ap.add_argument("--max-promotions", type=int, default=None,
+                    help="promotion-plan size per interval")
+    ap.add_argument("--autotune", action="store_true",
+                    help="tune (interval_steps, threshold_init) against a "
+                         "recorded pilot decode trace before serving")
     args = ap.parse_args()
 
     cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
-    assert cfg.family in ("dense", "vlm") or args.kv == "flat", \
-        "paged serving targets dense-family archs"
+    if args.prompt_len < 1 or args.tokens < 1:
+        ap.error("--prompt-len and --tokens must be >= 1")
+    if args.kv == "paged" and cfg.family not in ("dense", "vlm"):
+        ap.error(
+            f"--kv paged targets dense-family archs; --arch {args.arch} is "
+            f"family {cfg.family!r} (use --kv flat)"
+        )
+    if args.kv == "flat":
+        ignored = [
+            flag for flag, v in [
+                ("--autotune", args.autotune or None),
+                ("--interval-steps", args.interval_steps),
+                ("--top-n", args.top_n),
+                ("--hot-slots", args.hot_slots),
+                ("--max-promotions", args.max_promotions),
+            ] if v is not None
+        ]
+        if args.policy != "serving-default":
+            ignored.append("--policy")
+        if ignored:
+            ap.error(
+                f"{', '.join(ignored)} only appl{'y' if len(ignored) > 1 else 'ies'} "
+                "to the Rainbow-paged cache; drop the flag(s) or use --kv paged"
+            )
     key = jax.random.PRNGKey(0)
     params = M.init_params(cfg, key, tp=1)
     b = args.batch
@@ -51,9 +124,30 @@ def main() -> None:
             out.append(tok)
     else:
         nblk = (total + args.block_size - 1) // args.block_size
-        pcfg = PagedConfig(block_size=args.block_size, blocks_per_seq=nblk,
-                           hot_slots=max(8, nblk // 2), top_n=8,
-                           max_promotions=16, interval_steps=8)
+        try:
+            pcfg = build_paged_config(args, nblk)
+        except (ValueError, KeyError) as e:
+            # impossible geometry / unknown preset -> clean CLI error
+            ap.error(str(e.args[0]) if e.args else str(e))
+
+        if args.autotune:
+            from repro.engine.autotune import TunePlan, autotune
+
+            pilot = args.prompt_len + min(args.tokens, 16)
+            trace, _ = record_mass_trace(cfg, pcfg, params, prompt, steps=pilot)
+            plan = TunePlan.grid(
+                pcfg.policy,
+                interval_steps=(2, 4, 8, 16),
+                threshold_init=(0.0, 64.0),
+            )
+            res = autotune(plan, trace)
+            print(f"autotune ({pilot}-step pilot trace): {res.summary()}")
+            pcfg = PagedConfig(
+                block_size=pcfg.block_size,
+                blocks_per_seq=pcfg.blocks_per_seq,
+                policy=res.tuned_policy(),
+            )
+
         kv = paged_init(cfg, pcfg, b, 1, cfg.num_layers)
         step = jax.jit(lambda p, t, k: rainbow_decode_step(cfg, pcfg, p, t, k))
         # paged path consumes the prompt token-by-token (prefill-by-decode)

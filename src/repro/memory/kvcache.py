@@ -18,35 +18,121 @@ indirection. kernels/rainbow_attention implements the same recurrence tiled.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import counting, migration
-from repro.core.migration import TimingParams, make_timing
+from repro.core.migration import TimingParams, preset_timing
 from repro.core.remap import RemapState, remap_init, translate
+from repro.engine.policy import ControlPolicy, get_policy
 from repro.utils import pytree_dataclass, static_field
 
 
-@pytree_dataclass
+@pytree_dataclass(init=False)
 class PagedConfig:
+    """Layer-B cache config: ControlPolicy + block-pool geometry.
+
+    The interval-controller knobs (`hot_slots`, `top_n`, `max_promotions`,
+    `interval_steps`, ...) live on `policy` — the same ControlPolicy surface
+    Layer A's RainbowConfig composes and engine.autotune searches over. The
+    pre-redesign flat kwargs are kept as deprecation shims (init kwargs +
+    read-only properties), so `PagedConfig(hot_slots=8, ...)` and
+    `dataclasses.replace(pcfg, interval_steps=2)` keep working.
+    """
+
     block_size: int = static_field(default=16)  # tokens per block (4KB-page analogue)
     blocks_per_seq: int = static_field(default=512)  # blocks per superblock run
-    hot_slots: int = static_field(default=256)  # hot-pool capacity (blocks/layer)
-    top_n: int = static_field(default=16)  # monitored superblocks (stage 2)
-    max_promotions: int = static_field(default=64)  # per interval
-    interval_steps: int = static_field(default=8)  # decode steps per interval
     quantize: bool = static_field(default=False)  # int8 pools + bf16 scales
                                                   # (beyond-paper §Perf A3)
+    policy: ControlPolicy = static_field(default=None)
+
+    def __init__(
+        self,
+        block_size: int = 16,
+        blocks_per_seq: int = 512,
+        hot_slots: int | None = None,
+        top_n: int | None = None,
+        max_promotions: int | None = None,
+        interval_steps: int | None = None,
+        quantize: bool = False,
+        policy: ControlPolicy | str | None = None,
+    ):
+        if policy is None:
+            policy = get_policy("serving-default")
+        elif isinstance(policy, str):
+            policy = get_policy(policy)
+        legacy = {
+            "hot_slots": hot_slots,
+            "top_n": top_n,
+            "max_promotions": max_promotions,
+            "interval_steps": interval_steps,
+        }
+        overrides = {k: v for k, v in legacy.items() if v is not None}
+        if overrides:
+            policy = dataclasses.replace(policy, **overrides)
+        object.__setattr__(self, "block_size", block_size)
+        object.__setattr__(self, "blocks_per_seq", blocks_per_seq)
+        object.__setattr__(self, "quantize", quantize)
+        object.__setattr__(self, "policy", policy.validate("PagedConfig"))
+        self.validate()
+
+    def validate(self) -> "PagedConfig":
+        """Reject impossible serving geometries loudly (satellite fix) — the
+        old flat config let these flow into engine.control and silently
+        miscount (e.g. stage-2 monitor rows wider than the superblock)."""
+        pol = self.policy
+        if self.block_size < 1 or self.blocks_per_seq < 1:
+            raise ValueError(
+                "PagedConfig: block_size and blocks_per_seq must be >= 1 "
+                f"(got {self.block_size}, {self.blocks_per_seq})"
+            )
+        if pol.top_n > self.blocks_per_seq:
+            # Conservative guard: top_n counts monitored stage-2 units
+            # (sequences), and each monitor row carries blocks_per_seq
+            # counters — a top_n beyond the per-sequence block count is
+            # almost always a swapped or mistyped knob, so fail loudly.
+            raise ValueError(
+                f"PagedConfig: top_n ({pol.top_n}) > blocks_per_seq "
+                f"({self.blocks_per_seq}) — each stage-2 monitor row holds "
+                "blocks_per_seq counters; a monitor table wider than one "
+                "superblock's block count is a mis-sized config (shrink "
+                "top_n or pass a larger blocks_per_seq)"
+            )
+        if pol.max_promotions > pol.hot_slots:
+            raise ValueError(
+                f"PagedConfig: max_promotions ({pol.max_promotions}) > "
+                f"hot_slots ({pol.hot_slots}) — one interval can never admit "
+                "more blocks than the hot pool holds"
+            )
+        return self
+
+    # -- deprecation shims (old flat-knob surface) --------------------------
+
+    @property
+    def hot_slots(self) -> int:
+        return self.policy.hot_slots
+
+    @property
+    def top_n(self) -> int:
+        return self.policy.top_n
+
+    @property
+    def max_promotions(self) -> int:
+        return self.policy.max_promotions
+
+    @property
+    def interval_steps(self) -> int:
+        return self.policy.interval_steps
 
 
 def default_timing() -> TimingParams:
-    """HBM vs host-link costs in ns-per-block units (v5e-class: 819 GB/s HBM,
-    ~50 GB/s host link; T_mig = one block DMA + setup)."""
-    return make_timing(
-        t_nr=100.0, t_nw=180.0, t_dr=8.0, t_dw=12.0, t_mig=400.0, t_writeback=400.0
-    )
+    """The "v5e-serving" preset of core.migration.TIMING_PRESETS (ns-per-block
+    HBM vs host-link costs) — one shared table with the simulator's machine
+    model instead of a second hand-maintained copy."""
+    return preset_timing("v5e-serving")
 
 
 @pytree_dataclass
@@ -93,7 +179,7 @@ def paged_init(cfg, pcfg: PagedConfig, batch: int, tp: int, layers: int) -> Rain
         s1=counting.stage1_init(batch),
         s2=counting.stage2_init(pcfg.top_n, pcfg.blocks_per_seq),
         dram=migration.dram_init(pcfg.hot_slots),
-        threshold=jnp.zeros((), jnp.float32),
+        threshold=jnp.asarray(pcfg.policy.threshold_init, jnp.float32),
         length=jnp.zeros((), jnp.int32),
         step_in_interval=jnp.zeros((), jnp.int32),
     )
@@ -222,8 +308,6 @@ def promote_scales(scales: dict, pcfg: PagedConfig, plan, cand_sp, cand_pg) -> d
 
 
 def _replace(kv: RainbowKV, **kw) -> RainbowKV:
-    import dataclasses
-
     return dataclasses.replace(kv, **kw)
 
 
@@ -249,6 +333,16 @@ def gather_layer_kv(
     return pool_k[vidx], pool_v[vidx]
 
 
+def quantize_mass(mass: jax.Array) -> jax.Array:
+    """Attention mass -> uint32 access counts for the 15-bit counters.
+
+    THE single quantization of Layer B's access stream: observe_block_mass
+    counts with it and engine.autotune's replay prices the same counts, so the
+    tuner's cost model scores exactly the stream the controller sees.
+    """
+    return jnp.clip(mass * 64.0, 0, 1024).astype(jnp.uint32)
+
+
 def observe_block_mass(
     kv: RainbowKV, pcfg: PagedConfig, mass: jax.Array
 ) -> RainbowKV:
@@ -264,7 +358,7 @@ def observe_block_mass(
     intended semantics.
     """
     b, nblk = mass.shape
-    q = jnp.clip((mass * 64.0), 0, 1024).astype(jnp.uint32)
+    q = quantize_mass(mass)
     seq_ids = jnp.arange(b, dtype=jnp.int32)
     s1 = counting.stage1_record_weighted(kv.s1, seq_ids, q.sum(axis=1))
     # stage 2: only monitored superblocks count at block grain, mass-weighted
@@ -292,11 +386,9 @@ def end_interval_promote(
 
     timing = timing or default_timing()
     b = kv.s1.counts.shape[0]
-    ctrl = control.ControlConfig(
-        num_units=b,
-        pages_per_unit=pcfg.blocks_per_seq,
-        top_n=pcfg.top_n,
-        max_moves=pcfg.max_promotions,
+    # the controller instance comes straight from the unified policy surface
+    ctrl = pcfg.policy.control_config(
+        num_units=b, pages_per_unit=pcfg.blocks_per_seq
     )
     reads = counting.counter_value(kv.s2.counts)
     # never promote blocks beyond the current sequence length

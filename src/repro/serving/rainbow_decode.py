@@ -36,6 +36,7 @@ from repro.memory.kvcache import (
     dequantize_kv,
     end_interval_promote,
     observe_block_mass,
+    paged_init,
     promote_scales,
 )
 from repro.models import attention as attn
@@ -67,6 +68,66 @@ def _attend_with_mass(q, k, v, valid, block_size, nblk):
     return out, blk_mass
 
 
+def pool_indices(kv: RainbowKV, pcfg: PagedConfig, batch: int):
+    """Layer-invariant translated pool indices: (resident[B, nblk], vidx[B, nblk]).
+
+    vidx indexes the virtually concatenated [capacity ++ hot] pool; resident
+    blocks redirect to num_cap + slot (Fig. 6 cases via one indirection).
+    """
+    nblk = pcfg.blocks_per_seq
+    blocks = jnp.arange(nblk)
+    sp = jnp.arange(batch)[:, None].repeat(nblk, 1)
+    resident, slot = translate(kv.remap, sp, blocks[None, :].repeat(batch, 0))
+    home = (sp * nblk + blocks[None, :]).astype(jnp.int32)
+    vidx = jnp.where(resident, batch * nblk + slot, home)  # [B, nblk]
+    return resident, vidx
+
+
+def sparse_read_set(
+    kv: RainbowKV,
+    pcfg: PagedConfig,
+    batch: int,
+    nwin: int = 8,
+    precomputed: tuple[jax.Array, jax.Array] | None = None,
+):
+    """Sparse-mode read set: trailing-window home blocks ++ resident blocks.
+
+    Returns (read_idx, read_valid, read_block): pool indices per read lane,
+    the lane validity mask, and the seq-local block id each lane reads (-1 on
+    invalid lanes). This is the promotion-rejoin surface: a cold block whose
+    attention mass grows gets admitted by end_interval_promote, becomes
+    resident, and re-enters this set on the next decode step.
+    """
+    resident, vidx = precomputed or pool_indices(kv, pcfg, batch)
+    nblk = pcfg.blocks_per_seq
+    cur_blk = kv.length // pcfg.block_size
+    win = jnp.clip((cur_blk - jnp.arange(nwin))[None, :].repeat(batch, 0), 0, nblk - 1)
+    win_idx = jnp.take_along_axis(vidx, win, axis=1)
+    # Every block must appear in the read set at most ONCE: a duplicated key
+    # does not split its softmax mass, it DOUBLES its share (both copies add
+    # exp(s) to the numerator and denominator), skewing both the attention
+    # output and the recorded per-block mass. Window lanes dedupe against
+    # earlier window lanes (edge clipping repeats blocks early in decode)...
+    lane = jnp.arange(nwin)
+    win_dup = (win[:, :, None] == win[:, None, :]) & (lane[:, None] > lane[None, :])
+    win_valid = ~win_dup.any(-1)
+    # ...and hot lanes dedupe against the window. The hot pool is a GLOBAL
+    # resource: one sequence may own every slot, so each sequence exposes up
+    # to min(hot_slots, nblk) hot lanes. (A per-seq hot_slots // batch budget
+    # would hide promoted blocks of an imbalanced batch from the read set —
+    # breaking the promotion-rejoin invariant.)
+    hot_rank = jnp.argsort(~resident, axis=1)[:, : min(pcfg.hot_slots, nblk)]
+    hot_sel = jnp.take_along_axis(vidx, hot_rank, axis=1)
+    hot_ok = jnp.take_along_axis(resident, hot_rank, axis=1)
+    hot_ok &= ~(hot_rank[:, :, None] == win[:, None, :]).any(-1)
+    read_idx = jnp.concatenate([win_idx, jnp.where(hot_ok, hot_sel, 0)], axis=1)
+    read_valid = jnp.concatenate([win_valid, hot_ok], axis=1)
+    read_block = jnp.concatenate(
+        [jnp.where(win_valid, win, -1), jnp.where(hot_ok, hot_rank, -1)], axis=1
+    ).astype(jnp.int32)
+    return read_idx, read_valid, read_block
+
+
 def rainbow_decode_step(
     cfg,
     pcfg: PagedConfig,
@@ -77,6 +138,7 @@ def rainbow_decode_step(
     sc=None,
     mode: str = "full",
     scales: dict | None = None,  # int8 mode (pcfg.quantize): scale side pytree
+    collect_mass: bool = False,  # also return this step's [B, nblk] block mass
 ):
     """One decode step for a dense-family LM over the Rainbow paged cache."""
     assert cfg.family in ("dense", "vlm"), "rainbow decode targets dense-family archs"
@@ -90,24 +152,12 @@ def rainbow_decode_step(
     seg_params = params["segments"][seg.name]
 
     # Translation is layer-invariant: compute the virtual pool indices once.
-    blocks = jnp.arange(nblk)
-    sp = jnp.arange(b)[:, None].repeat(nblk, 1)
-    resident, slot = translate(kv.remap, sp, blocks[None, :].repeat(b, 0))
-    home = (sp * nblk + blocks[None, :]).astype(jnp.int32)
-    n_cap = b * nblk
-    vidx = jnp.where(resident, n_cap + slot, home)  # [B, nblk]
+    resident, vidx = pool_indices(kv, pcfg, b)
 
     if mode == "sparse":
-        # Read set = trailing-window home blocks ++ resident (hot) blocks.
-        nwin = 8
-        cur_blk = cur // pcfg.block_size
-        win = jnp.clip((cur_blk - jnp.arange(nwin))[None, :].repeat(b, 0), 0, nblk - 1)
-        win_idx = jnp.take_along_axis(vidx, win, axis=1)
-        hot_rank = jnp.argsort(~resident, axis=1)[:, : pcfg.hot_slots // max(b, 1)]
-        hot_sel = jnp.take_along_axis(vidx, hot_rank, axis=1)
-        hot_ok = jnp.take_along_axis(resident, hot_rank, axis=1)
-        read_idx = jnp.concatenate([win_idx, jnp.where(hot_ok, hot_sel, 0)], axis=1)
-        read_valid = jnp.concatenate([jnp.ones_like(win_idx, bool), hot_ok], axis=1)
+        read_idx, read_valid, read_block = sparse_read_set(
+            kv, pcfg, b, precomputed=(resident, vidx)
+        )
     else:
         read_idx = vidx
         read_valid = None
@@ -143,10 +193,20 @@ def rainbow_decode_step(
             valid = jnp.concatenate(
                 [token_ok, jnp.ones((b, 1), bool)], axis=1
             )  # fresh token always readable
-            o, mass = _attend_with_mass(
+            o, lane_mass = _attend_with_mass(
                 q, k_r, v_r, valid, pcfg.block_size, read_idx.shape[1]
             )
-            blk_mass = jnp.zeros((b, nblk), jnp.float32)
+            # Scatter read-lane mass back to home blocks so the controller
+            # observes sparse reads too (lanes are deduplicated, so each
+            # block's mass lands exactly once; invalid lanes drop). Without
+            # this, sparse mode fed zero mass to observe_block_mass, nothing
+            # ever promoted, and a hot block leaving the trailing window was
+            # lost forever — the promotion-rejoin path existed only in full
+            # mode.
+            dest = jnp.where(read_block >= 0, read_block, nblk)
+            blk_mass = jnp.zeros((b, nblk), jnp.float32).at[
+                jnp.arange(b)[:, None], dest
+            ].add(lane_mass, mode="drop")
         else:
             pos_ids = jnp.arange(smax)
             valid = (pos_ids < cur) | (pos_ids == smax - 1)  # history + fresh
@@ -170,7 +230,8 @@ def rainbow_decode_step(
         kv, scales = append_token_q8(kv, pcfg, scales, k_all, v_all)
     else:
         kv = append_token(kv, pcfg, None, k_all, v_all)
-    kv = observe_block_mass(kv, pcfg, mass_all.sum(axis=0))
+    step_mass = mass_all.sum(axis=0)  # [B, nblk] — the controller's access stream
+    kv = observe_block_mass(kv, pcfg, step_mass)
     kv = dataclasses.replace(kv, length=kv.length + 1)
 
     if pcfg.quantize:
@@ -195,6 +256,48 @@ def rainbow_decode_step(
 
     h = L.apply_norm(cfg, params["final_norm"], h)
     logits = L.lm_logits(cfg, params["embed"], h)
-    if pcfg.quantize:
-        return logits, kv, scales
-    return logits, kv
+    out = (logits, kv) + ((scales,) if pcfg.quantize else ())
+    if collect_mass:
+        out = out + (step_mass,)
+    return out
+
+
+def record_mass_trace(
+    cfg,
+    pcfg: PagedConfig,
+    params: Any,
+    prompt: jax.Array,  # int32[B, P] prompt tokens (consumed prefill-by-decode)
+    steps: int,  # total decode steps recorded (>= prompt length)
+    tp: int = 1,
+):
+    """Run a real model decode and record the controller's access stream.
+
+    Returns (MassTrace, final RainbowKV). The trace holds one [B, nblk]
+    attention-mass row per decode step — exactly what observe_block_mass saw —
+    so `engine.autotune` can replay the observe/promote control loop against
+    it for any candidate ControlPolicy without re-running the model.
+    """
+    from repro.engine.autotune import MassTrace
+    from repro.serving.steps import greedy_sample
+
+    assert not pcfg.quantize, "mass-trace recording targets the fp pools"
+    b, plen = prompt.shape
+    if steps < plen:
+        raise ValueError(f"steps ({steps}) must cover the prompt ({plen})")
+    step = jax.jit(
+        lambda p, t, k: rainbow_decode_step(cfg, pcfg, p, t, k, tp=tp,
+                                            collect_mass=True)
+    )
+    kv = paged_init(cfg, pcfg, b, tp, cfg.num_layers)
+    rows = []
+    tok = prompt[:, :1]
+    for t in range(steps):
+        if t < plen:
+            tok = prompt[:, t:t + 1]
+        logits, kv, mass = step(params, tok, kv)
+        rows.append(np.asarray(mass, np.float32))
+        tok = greedy_sample(logits, cfg.vocab_size)
+    trace = MassTrace(
+        mass=np.stack(rows), block_size=pcfg.block_size, start_length=0
+    )
+    return trace, kv

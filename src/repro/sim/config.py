@@ -10,12 +10,19 @@ from __future__ import annotations
 
 import dataclasses
 
-CPU_GHZ = 3.2
+from repro.core.migration import SIM_CPU_GHZ, SIM_PAGE_BYTES, TIMING_PRESETS
+
+CPU_GHZ = SIM_CPU_GHZ
 NS = CPU_GHZ  # cycles per nanosecond
+
+# Memory latencies + page-migration costs come from the shared preset table
+# (core.migration.TIMING_PRESETS, built from the SAME clock/page constants) so
+# the simulator and serving cost models are never two divergent copies.
+_T4 = TIMING_PRESETS["paper-table4-sim"]
 
 SCALE_DOWN = 16
 
-PAGE_BYTES = 4096
+PAGE_BYTES = SIM_PAGE_BYTES
 SP_BYTES = 2 << 20
 PAGES_PER_SP = SP_BYTES // PAGE_BYTES  # 512
 
@@ -30,11 +37,11 @@ class MachineConfig:
     l2_tlb_ways: int = 8
     l2_tlb_lat: float = 8.0
 
-    # --- memory latencies (cycles @ 3.2 GHz) ---
-    t_dr: float = 13.5 * NS  # DRAM read  = 43.2
-    t_dw: float = 28.5 * NS  # DRAM write = 91.2
-    t_nr: float = 19.5 * NS  # PCM read   = 62.4
-    t_nw: float = 171.0 * NS  # PCM write  = 547.2
+    # --- memory latencies (cycles @ 3.2 GHz, from the shared preset table) ---
+    t_dr: float = _T4["t_dr"]  # DRAM read  = 43.2
+    t_dw: float = _T4["t_dw"]  # DRAM write = 91.2
+    t_nr: float = _T4["t_nr"]  # PCM read   = 62.4
+    t_nw: float = _T4["t_nw"]  # PCM write  = 547.2
 
     # --- translation structures ---
     bitmap_cache_lat: float = 9.0
@@ -47,8 +54,8 @@ class MachineConfig:
     # --- consistency / migration costs (cycles) ---
     shootdown_cost: float = 4000.0  # per TLB shootdown event (IPI + inval)
     clflush_per_line: float = 40.0  # per 64B line flushed on migration
-    mig_page_cost: float = (PAGE_BYTES / 10.7e9) * 1e9 * NS * 2  # rd PCM + wr DRAM
-    writeback_page_cost: float = (PAGE_BYTES / 10.7e9) * 1e9 * NS * 2
+    mig_page_cost: float = _T4["t_mig"]  # rd PCM + wr DRAM, one 4 KB page
+    writeback_page_cost: float = _T4["t_writeback"]
 
     # --- capacities (scaled) ---
     dram_bytes: int = (4 << 30) // SCALE_DOWN

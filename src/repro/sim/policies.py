@@ -24,6 +24,7 @@ import numpy as np
 from repro.core import rainbow as rb
 from repro.core.migration import TimingParams, make_timing
 from repro.core.tlb import tlb_invalidate
+from repro.engine.policy import sim_policy_for
 from repro.sim import tlbsim
 from repro.sim.config import PAGES_PER_SP, MachineConfig
 from repro.sim.trace import Trace
@@ -184,15 +185,15 @@ class Rainbow(Policy):
 
     def __init__(self, mc, trace0, seed=0):
         super().__init__(mc, trace0, seed)
+        # the controller knobs come from the registered "sim-rainbow" preset —
+        # the same ControlPolicy surface the engine, fleet sweeps, and the
+        # serving autotuner consume (no duplicated knob definitions)
         self.cfg = rb.RainbowConfig(
             num_superpages=self.num_sp,
             pages_per_sp=PAGES_PER_SP,
-            top_n=mc.top_n,
-            dram_slots=mc.dram_pages,
-            write_weight=mc.write_weight,
-            max_migrations_per_interval=512,
+            policy=sim_policy_for("rainbow", mc),
         )
-        self.state = rb.rainbow_init(self.cfg, threshold=mc.mig_threshold)
+        self.state = rb.rainbow_init(self.cfg)
 
     def residency(self, trace: Trace) -> np.ndarray:
         in_dram, _ = rb.translate_accesses(

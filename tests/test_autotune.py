@@ -1,0 +1,165 @@
+"""engine.autotune: TunePlan search, engine-in-the-loop replay, path parity."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.engine.autotune import MassTrace, TunePlan, autotune, evaluate
+from repro.engine.policy import ControlPolicy
+
+
+def _synthetic_trace(T=24, B=2, nblk=8, block_size=4):
+    """A stationary hot set (blocks 1 and 3) + light background traffic —
+    the shape that rewards early promotion over the do-nothing default."""
+    mass = np.zeros((T, B, nblk), np.float32)
+    mass[:, :, 1] = 0.5
+    mass[:, :, 3] = 0.3
+    mass[:, :, 5] = 0.05
+    return MassTrace(mass=mass, block_size=block_size,
+                     start_length=block_size * nblk)
+
+
+def _base():
+    return ControlPolicy(interval_steps=8, top_n=2, max_promotions=2,
+                         hot_slots=4)
+
+
+def test_tune_plan_candidates_and_validation():
+    plan = TunePlan.grid(_base(), interval_steps=(2, 8),
+                         threshold_init=(0.0, 64.0))
+    cands = plan.candidates()
+    assert len(cands) == 4
+    assert {c.interval_steps for c in cands} == {2, 8}
+    assert all(c.top_n == 2 for c in cands)  # base fields ride along
+    with pytest.raises(ValueError, match="unknown ControlPolicy fields"):
+        TunePlan.grid(_base(), block_size=(4, 8))
+    with pytest.raises(ValueError, match="interval_steps must be >= 1"):
+        TunePlan.grid(_base(), interval_steps=(0,)).candidates()
+    assert TunePlan.grid(_base()).candidates() == (_base(),)
+
+
+def test_mass_trace_prefix():
+    tr = _synthetic_trace(T=24)
+    assert tr.steps == 24 and tr.batch == 2 and tr.blocks_per_seq == 8
+    assert tr.prefix(6).steps == 6
+    assert tr.prefix(6).start_length == tr.start_length
+
+
+def test_replay_promotes_and_prices_the_hot_set():
+    """Engine-in-the-loop: the replay runs the REAL controller (promotions
+    happen), and promoted mass gets re-priced from t_nr to t_dr."""
+    tr = _synthetic_trace()
+    [row] = evaluate(tr, [_base().replace(interval_steps=2)])
+    assert row["promotions"] > 0
+    # an impossible admission threshold keeps everything in the slow tier
+    [frozen] = evaluate(tr, [_base().replace(interval_steps=2,
+                                             threshold_init=1e9)])
+    assert frozen["promotions"] == 0
+    assert row["cost_per_step"] < frozen["cost_per_step"]
+
+
+def test_autotune_beats_default_and_is_deterministic():
+    tr = _synthetic_trace()
+    plan = TunePlan.grid(_base(), interval_steps=(2, 8))
+    res = autotune(plan, tr)
+    assert res.improved, res.summary()
+    assert res.tuned_policy().interval_steps == 2
+    assert res.baseline == _base()
+    # same inputs -> same winner, same table
+    res2 = autotune(plan, tr)
+    assert res2.best == res.best and res2.best_cost == res.best_cost
+    # rungs recorded for every evaluated candidate
+    assert {r["rung"] for r in res.table} == {0, 1}
+    assert "tuned" in res.summary()
+
+
+def test_vmap_and_sharded_paths_bit_identical_in_process():
+    tr = _synthetic_trace()
+    plan = TunePlan.grid(_base(), interval_steps=(2, 4, 8),
+                         threshold_init=(0.0, 128.0))
+    cands = plan.candidates()
+    assert evaluate(tr, cands, runner="vmap") == evaluate(
+        tr, cands, runner="sharded")
+    with pytest.raises(ValueError, match="unknown runner"):
+        evaluate(tr, cands, runner="pmap")
+
+
+def test_candidates_validate_against_trace_geometry():
+    tr = _synthetic_trace(nblk=8)
+    with pytest.raises(ValueError, match="top_n .* blocks_per_seq"):
+        evaluate(tr, [_base().replace(top_n=16, max_promotions=1)])
+
+
+def test_sharded_autotune_bit_identical_on_4_devices():
+    """4 forced host devices: the shard_mapped replay (padding included —
+    6 candidates pad to 8) picks the identical winner at identical cost."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax
+        import numpy as np
+        from repro.engine.autotune import MassTrace, TunePlan, autotune, evaluate
+        from repro.engine.policy import ControlPolicy
+
+        assert len(jax.devices()) == 4
+        mass = np.zeros((24, 2, 8), np.float32)
+        mass[:, :, 1] = 0.5; mass[:, :, 3] = 0.3; mass[:, :, 5] = 0.05
+        tr = MassTrace(mass=mass, block_size=4, start_length=32)
+        base = ControlPolicy(interval_steps=8, top_n=2, max_promotions=2,
+                             hot_slots=4)
+        plan = TunePlan.grid(base, interval_steps=(2, 4, 8),
+                             threshold_init=(0.0, 128.0))
+        cands = plan.candidates()
+        assert len(cands) == 6  # NOT divisible by 4: exercises padding
+        rows_v = evaluate(tr, cands, runner="vmap")
+        rows_s = evaluate(tr, cands, runner="sharded")
+        assert rows_v == rows_s, (rows_v, rows_s)
+        a = autotune(plan, tr, runner="vmap")
+        b = autotune(plan, tr, runner="sharded")
+        assert a.best == b.best and a.best_cost == b.best_cost
+        assert a.improved
+        print("AUTOTUNE_SHARDED_OK")
+    """)
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        env=env, cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert "AUTOTUNE_SHARDED_OK" in out.stdout, out.stderr[-2000:]
+
+
+def test_record_mass_trace_feeds_autotune():
+    """The serving recorder -> autotuner loop on a real reduced model."""
+    import jax
+
+    from repro.configs import get_reduced_config
+    from repro.memory.kvcache import PagedConfig
+    from repro.models import model as M
+    from repro.serving.rainbow_decode import record_mass_trace
+
+    cfg = get_reduced_config("qwen3-4b")
+    key = jax.random.PRNGKey(0)
+    B, S = 2, 16
+    pcfg = PagedConfig(block_size=4, blocks_per_seq=S // 4, hot_slots=4,
+                       top_n=4, max_promotions=4, interval_steps=8)
+    params = M.init_params(cfg, key, tp=1)
+    prompt = jax.random.randint(key, (B, 8), 0, cfg.vocab_size)
+    trace, kv = record_mass_trace(cfg, pcfg, params, prompt, steps=S)
+    assert trace.mass.shape == (S, B, S // 4)
+    assert float(trace.mass.sum()) > 0
+    assert int(kv.length) == S
+
+    res = autotune(
+        TunePlan.grid(pcfg.policy, interval_steps=(2, 8)), trace)
+    assert res.improved, res.summary()
+    # the tuned policy drops straight back into the serving config
+    tuned = PagedConfig(block_size=4, blocks_per_seq=S // 4,
+                        policy=res.tuned_policy())
+    assert tuned.interval_steps == res.best.interval_steps
+
+    with pytest.raises(ValueError, match="must cover the prompt"):
+        record_mass_trace(cfg, pcfg, params, prompt, steps=4)

@@ -68,6 +68,66 @@ def test_sparse_mode_runs_and_is_bounded():
     # but outputs must stay sane (same argmax for most steps is typical)
 
 
+def _read_set_blocks(kv, pcfg, batch, seq):
+    """Seq-local block ids currently in `seq`'s sparse read set."""
+    from repro.serving.rainbow_decode import sparse_read_set
+
+    _, valid, blocks = sparse_read_set(kv, pcfg, batch)
+    v = np.asarray(valid[seq])
+    return set(np.asarray(blocks[seq])[v].tolist())
+
+
+def test_sparse_promotion_rejoin_crafted_mass():
+    """THE rejoin invariant (satellite): a cold block outside the trailing
+    window whose attention mass grows must be promoted at end_interval_promote
+    and re-enter the sparse read set."""
+    from repro.memory.kvcache import observe_block_mass
+
+    # 12 blocks >> the 8-block trailing window, so old blocks fall out of
+    # the sparse read set unless promotion brings them back
+    cfg, pcfg, params, toks, B, S = _setup(S=48)
+    nblk = pcfg.blocks_per_seq
+    kv = paged_init(cfg, pcfg, B, 1, cfg.num_layers)
+    kv = dataclasses.replace(kv, length=jnp.int32(S))  # all blocks valid
+
+    target = 0  # block 0 is far behind the trailing window at length S
+    assert target not in _read_set_blocks(kv, pcfg, B, seq=0)
+
+    # interval 1: stage-1 sees seq 0's heat -> monitors rotate onto it
+    hot = jnp.zeros((B, nblk), jnp.float32).at[0, target].set(4.0)
+    kv = observe_block_mass(kv, pcfg, hot)
+    kv, _ = end_interval_promote(kv, pcfg)
+    # interval 2: stage-2 (now monitoring seq 0) sees the block's mass grow
+    kv = observe_block_mass(kv, pcfg, hot)
+    kv, rep = end_interval_promote(kv, pcfg)
+    assert int(rep["promoted"]) >= 1
+
+    rejoined = _read_set_blocks(kv, pcfg, B, seq=0)
+    assert target in rejoined, (
+        f"promoted block {target} must re-enter the sparse read set "
+        f"(got {sorted(rejoined)})"
+    )
+
+
+def test_sparse_decode_promotes_and_rejoins_end_to_end():
+    """Decode-driven rejoin: sparse mode must record real block mass (not
+    zeros), promote hot history blocks, and read them once resident."""
+    cfg, pcfg, params, toks, B, S = _setup(interval_steps=2)
+    rb_sparse = jax.jit(
+        lambda p, t, k: rainbow_decode_step(cfg, pcfg, p, t, k, mode="sparse"))
+    kv = paged_init(cfg, pcfg, B, 1, cfg.num_layers)
+    for t in range(S):
+        _, kv = rb_sparse(params, toks[:, t:t + 1], kv)
+    resident = int((kv.remap.remap >= 0).sum())
+    assert resident > 0, "sparse decode never promoted a block"
+    # every resident block is part of the sparse read set again
+    for seq in range(B):
+        in_set = _read_set_blocks(kv, pcfg, B, seq)
+        rm = np.asarray(kv.remap.remap[seq])
+        for blk in np.nonzero(rm >= 0)[0].tolist():
+            assert blk in in_set
+
+
 def test_interval_promote_copies_payload():
     cfg, pcfg, params, toks, B, S = _setup()
     kv = paged_init(cfg, pcfg, B, 1, cfg.num_layers)

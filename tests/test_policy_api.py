@@ -1,0 +1,286 @@
+"""The unified ControlPolicy surface: validation, registry, shims, timing dedupe.
+
+Acceptance: sim.policies presets, memory.kvcache, and launch/serve.py all
+construct their interval controller from the same registered ControlPolicy
+objects; the old flat-knob configs keep working through deprecation shims.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.migration import TIMING_PRESETS, preset_timing
+from repro.core.rainbow import RainbowConfig
+from repro.engine.policy import (
+    ControlPolicy,
+    available_policies,
+    get_policy,
+    register_policy,
+    resolve_policy,
+    sim_policy_for,
+)
+from repro.memory.kvcache import PagedConfig, default_timing
+from repro.sim.config import MachineConfig
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+
+def test_control_policy_rejects_bad_knobs():
+    with pytest.raises(ValueError, match="interval_steps must be >= 1"):
+        ControlPolicy(interval_steps=0).validate()
+    with pytest.raises(ValueError, match="top_n must be >= 1"):
+        ControlPolicy(top_n=0).validate()
+    with pytest.raises(ValueError, match="counter_decay"):
+        ControlPolicy(counter_decay=1.0).validate()
+    with pytest.raises(ValueError, match="counter_backend"):
+        ControlPolicy(counter_backend="numpy").validate()
+    # replace() validates too (the TunePlan candidate path)
+    with pytest.raises(ValueError, match="max_promotions must be >= 1"):
+        ControlPolicy().replace(max_promotions=0)
+
+
+def test_paged_config_rejects_impossible_geometry():
+    with pytest.raises(ValueError, match="top_n .* blocks_per_seq"):
+        PagedConfig(blocks_per_seq=4, top_n=8)
+    with pytest.raises(ValueError, match="max_promotions .* hot_slots"):
+        PagedConfig(hot_slots=4, max_promotions=16)
+    with pytest.raises(ValueError, match="interval_steps must be >= 1"):
+        PagedConfig(interval_steps=0)
+    with pytest.raises(ValueError, match="block_size"):
+        PagedConfig(block_size=0)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def test_paged_config_legacy_kwargs_compose_policy():
+    pcfg = PagedConfig(block_size=4, blocks_per_seq=8, hot_slots=6, top_n=4,
+                       max_promotions=4, interval_steps=2)
+    assert pcfg.policy == ControlPolicy(
+        interval_steps=2, top_n=4, max_promotions=4, hot_slots=6
+    )
+    # the flat read surface still works
+    assert (pcfg.hot_slots, pcfg.top_n, pcfg.max_promotions,
+            pcfg.interval_steps) == (6, 4, 4, 2)
+    # dataclasses.replace with a legacy knob routes through the policy
+    assert dataclasses.replace(pcfg, interval_steps=3).policy.interval_steps == 3
+    # and with the new field
+    p2 = dataclasses.replace(pcfg, policy=pcfg.policy.replace(top_n=8))
+    assert p2.top_n == 8
+
+
+def test_paged_config_accepts_policy_and_preset_name():
+    pol = ControlPolicy(interval_steps=4, top_n=2, max_promotions=2, hot_slots=4)
+    assert PagedConfig(block_size=2, blocks_per_seq=4, policy=pol).policy == pol
+    byname = PagedConfig(policy="serving-default")
+    assert byname.policy == get_policy("serving-default")
+    # defaults unchanged vs the pre-redesign flat config
+    d = PagedConfig()
+    assert (d.block_size, d.blocks_per_seq, d.hot_slots, d.top_n,
+            d.max_promotions, d.interval_steps, d.quantize) == (
+        16, 512, 256, 16, 64, 8, False)
+
+
+def test_rainbow_config_legacy_kwargs_and_properties():
+    cfg = RainbowConfig(num_superpages=8, pages_per_sp=4, top_n=2, dram_slots=4)
+    assert (cfg.top_n, cfg.dram_slots) == (2, 4)
+    assert cfg.policy.hot_slots == 4
+    # untouched legacy knobs keep their old defaults
+    assert (cfg.write_weight, cfg.max_migrations_per_interval,
+            cfg.counter_backend) == (2, 512, "jax")
+    # configs stay hashable/static (jit static args, fleet group keys)
+    assert hash(cfg) == hash(RainbowConfig(num_superpages=8, pages_per_sp=4,
+                                           top_n=2, dram_slots=4))
+
+
+def test_configs_are_pytree_static():
+    pcfg = PagedConfig(block_size=2, blocks_per_seq=4, hot_slots=2, top_n=2,
+                       max_promotions=2)
+    leaves, treedef = jax.tree.flatten(pcfg)
+    assert leaves == []  # all-static: policy+geometry ride in the treedef
+    assert jax.tree.unflatten(treedef, leaves) == pcfg
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_presets_and_errors():
+    names = available_policies()
+    assert {"serving-default", "sim-rainbow", "hscc-4kb", "hscc-2mb"} <= set(names)
+    with pytest.raises(KeyError, match="unknown policy preset"):
+        get_policy("nope")
+    with pytest.raises(ValueError, match="already registered"):
+        register_policy("serving-default")(lambda **kw: ControlPolicy())
+    assert resolve_policy(None, "serving-default") == ControlPolicy()
+    assert resolve_policy("serving-default", "sim-rainbow") == ControlPolicy()
+
+
+def test_one_policy_surface_across_layers():
+    """sim.policies, engine.simloop, and memory.kvcache all derive their
+    controller from the same registered ControlPolicy objects."""
+    import repro.engine.simloop as simloop
+    from repro.sim.policies import Rainbow
+    from repro.sim.trace import generate
+
+    mc = MachineConfig()
+    want = get_policy("sim-rainbow", mc=mc)
+    assert want.top_n == mc.top_n and want.hot_slots == mc.dram_pages
+    assert want.threshold_init == mc.mig_threshold
+
+    tr = generate("streamcluster", seed=0, interval=0, accesses=500)
+    pol = Rainbow(mc, tr)
+    assert pol.cfg.policy == want
+
+    spec = simloop.EngineSpec(
+        policy="rainbow", mc=mc,
+        num_superpages=tr.num_superpages, footprint_pages=tr.footprint_pages,
+    )
+    assert spec.control_policy() == want
+    assert simloop._rainbow_cfg(spec).policy == want
+    # EngineSpec.control overrides win (the autotune / sweep hook)
+    tuned = want.replace(top_n=7, threshold_init=5.0)
+    spec2 = dataclasses.replace(spec, control=tuned)
+    assert spec2.control_policy() == tuned
+    # HSCC ports read their presets
+    assert sim_policy_for("hscc-4kb-mig", mc).max_promotions == 512
+    assert sim_policy_for("hscc-2mb-mig", mc).max_promotions == 64
+    assert sim_policy_for("hscc-2mb-mig", mc).hot_slots == mc.dram_superpages
+
+
+def test_sweep_grid_accepts_policy_override():
+    from repro.engine import fleet
+
+    tuned = get_policy("sim-rainbow").replace(top_n=12)
+    plan = fleet.SweepPlan.grid(["streamcluster"], ["rainbow"], (0,),
+                                policy=tuned, intervals=2, accesses=1000)
+    (cell,) = plan.cells
+    assert cell.control == tuned
+    (group,) = fleet.plan_groups(plan)
+    assert group.spec.control == tuned
+    assert group.spec.control_policy().top_n == 12
+    # a preset name resolves through the registry too
+    plan2 = fleet.SweepPlan.grid(["streamcluster"], ["rainbow"], (0,),
+                                 policy="sim-rainbow", intervals=2,
+                                 accesses=1000)
+    assert plan2.cells[0].control == get_policy(
+        "sim-rainbow", mc=plan2.cells[0].mc)
+
+
+def test_sweep_grid_override_rejects_mixed_stateful_kinds():
+    """One ControlPolicy's knobs are in one policy kind's units — applying it
+    across rainbow AND hscc-2mb would silently give the 2MB baseline a
+    4KB-page slot count (~512x the real capacity)."""
+    from repro.engine import fleet
+
+    with pytest.raises(ValueError, match="multiple stateful policy kinds"):
+        fleet.SweepPlan.grid(
+            ["streamcluster"], ["rainbow", "hscc-2mb-mig"], (0,),
+            policy="sim-rainbow", intervals=2, accesses=1000,
+        )
+    # state-free policies riding along are fine (they ignore the override)
+    plan = fleet.SweepPlan.grid(
+        ["streamcluster"], ["rainbow", "flat-static"], (0,),
+        policy="sim-rainbow", intervals=2, accesses=1000,
+    )
+    assert len(plan) == 2
+
+
+def test_control_override_counter_backend_is_authoritative():
+    """A backend set on the override must not be clobbered by the cell/spec
+    default 'jax' (and an explicit conflict errors loudly at grid time)."""
+    import repro.engine.simloop as simloop
+    from repro.engine import fleet
+
+    pallas_pol = get_policy("sim-rainbow").replace(counter_backend="interpret")
+    spec = simloop.EngineSpec(
+        policy="rainbow", mc=MachineConfig(),
+        num_superpages=8, footprint_pages=64, control=pallas_pol,
+    )  # spec.counter_backend defaults to "jax"
+    assert spec.control_policy().counter_backend == "interpret"
+    with pytest.raises(ValueError, match="conflicting counter_backend"):
+        fleet.SweepPlan.grid(["streamcluster"], ["rainbow"], (0,),
+                             policy=pallas_pol, counter_backend="ref")
+
+
+def test_policy_override_changes_engine_behaviour():
+    """A ControlPolicy override must actually reach the scanned engine."""
+    from repro.sim.runner import SimMetrics, finalize_metrics, totals_from_stats
+    import repro.engine.simloop as simloop
+
+    mc = MachineConfig()
+    chunks, meta = simloop.make_chunks("streamcluster", "rainbow", mc, 0, 2,
+                                       3000)
+    base_spec = simloop.EngineSpec(
+        policy="rainbow", mc=mc,
+        num_superpages=meta["num_superpages"],
+        footprint_pages=meta["footprint_pages"],
+    )
+    # a prohibitive admission threshold must kill all migrations
+    frozen = get_policy("sim-rainbow", mc=mc).replace(threshold_init=1e9)
+    hi_spec = dataclasses.replace(base_spec, control=frozen)
+    _, stats_base = simloop.engine_run(
+        base_spec, simloop.engine_init(base_spec), chunks)
+    _, stats_hi = simloop.engine_run(
+        hi_spec, simloop.engine_init(hi_spec), chunks)
+    assert int(np.asarray(stats_base.migrations).sum()) > 0
+    assert int(np.asarray(stats_hi.migrations).sum()) == 0
+
+
+# ---------------------------------------------------------------------------
+# counter decay
+# ---------------------------------------------------------------------------
+
+
+def test_counter_decay_keeps_stage1_history():
+    from repro.engine import control
+    from repro.core import counting, migration
+
+    s1 = counting.Stage1State(
+        counts=jnp.asarray([100, 3, 0, 40000], jnp.uint16))
+    dram = migration.dram_init(4)
+    # default: full reset (bit-identical to the paper)
+    cfg0 = control.ControlConfig(num_units=4, pages_per_unit=2, top_n=2)
+    fresh, _, _ = control.rotate_monitors(cfg0, s1, dram)
+    assert int(fresh.counts.sum()) == 0
+    # decay: floor(value * decay), overflow bit re-derived from the value
+    cfgd = control.ControlConfig(num_units=4, pages_per_unit=2, top_n=2,
+                                 counter_decay=0.5)
+    kept, _, _ = control.rotate_monitors(cfgd, s1, dram)
+    vals = counting.counter_value(kept.counts)
+    assert vals[0] == 50 and vals[1] == 1 and vals[2] == 0
+    # 40000 has the overflow bit set -> effective 32768, decays to 16384
+    assert vals[3] == 16384
+
+
+# ---------------------------------------------------------------------------
+# timing dedupe
+# ---------------------------------------------------------------------------
+
+
+def test_one_timing_table():
+    from repro.sim.policies import machine_timing
+
+    # serving: kvcache.default_timing IS the v5e preset
+    v5e = preset_timing("v5e-serving")
+    for a, b in zip(jax.tree.leaves(default_timing()), jax.tree.leaves(v5e)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # sim: MachineConfig's latencies read the paper preset verbatim
+    mc = MachineConfig()
+    t4 = TIMING_PRESETS["paper-table4-sim"]
+    assert (mc.t_nr, mc.t_nw, mc.t_dr, mc.t_dw) == (
+        t4["t_nr"], t4["t_nw"], t4["t_dr"], t4["t_dw"])
+    assert (mc.mig_page_cost, mc.writeback_page_cost) == (
+        t4["t_mig"], t4["t_writeback"])
+    tp = machine_timing(mc)
+    assert float(tp.t_nr) == np.float32(t4["t_nr"])
+    with pytest.raises(KeyError, match="unknown timing preset"):
+        preset_timing("a100")
