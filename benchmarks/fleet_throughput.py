@@ -8,6 +8,12 @@ cells/sec over a homogeneous 32-cell fleet (one app x policy, many seeds):
               + the same per-cell finalize the old sim.runner.sweep did
   sharded     FleetRunner: shard_map over the fleet mesh, padded fleet axis,
               double-buffered host staging, per-cell SimMetrics
+  barrier/streamed
+              the same 32 cells split over 4 compile-signature groups, run
+              through FleetRunner.run (all results at the end) vs
+              FleetRunner.run_iter (each group retired as its scan finishes);
+              total cells/sec should tie — the streamed win is
+              time-to-first-result (first_result_s column)
 
 The fleet axis needs enough lanes for device parallelism to beat the vmap
 lanes' vectorization (per-scan-step op overhead dominates small fleets on
@@ -90,8 +96,38 @@ def _measure() -> dict:
     def sharded():
         runner.run(plan)
 
+    # Streaming leg: same cell count split over 4 compile-signature groups
+    # (4 MachineConfig variants x 8 seeds, identical trace shapes), so
+    # run_iter actually has groups to retire incrementally.  Barrier vs
+    # streamed total throughput should tie; the streamed win is
+    # TIME-TO-FIRST-RESULT — downstream consumers start after group 0.
+    group_plans = [
+        fleet.SweepPlan.grid(
+            [APP], [POLICY], tuple(range(FLEET // 4)),
+            mc=MachineConfig(top_n=mc.top_n + 8 * i),
+            intervals=INTERVALS, accesses=ACCESSES,
+        )
+        for i in range(4)
+    ]
+    grouped_plan = sum(group_plans[1:], group_plans[0])
+    first_cell = {}
+
+    def barrier_grouped():
+        t0 = time.perf_counter()
+        res = runner.run(grouped_plan)
+        next(iter(res.metrics.values()))
+        first_cell["barrier-grouped"] = time.perf_counter() - t0
+
+    def streamed_grouped():
+        t0 = time.perf_counter()
+        for i, _ in enumerate(runner.run_iter(grouped_plan)):
+            if i == 0:
+                first_cell["streamed-fleet"] = time.perf_counter() - t0
+
     modes = [("host-loop", host_loop, 1), ("batched-vmap", batched, 2),
-             ("sharded-fleet", sharded, 2)]
+             ("sharded-fleet", sharded, 2),
+             ("barrier-grouped", barrier_grouped, 2),
+             ("streamed-fleet", streamed_grouped, 2)]
     rows, rates = [], {}
     simulate(APP, POLICY, mc, intervals=INTERVALS, accesses=ACCESSES,
              seed=seeds[0])  # warm the single-cell compile for host-loop
@@ -107,11 +143,20 @@ def _measure() -> dict:
             "devices": len(jax.devices()),
             "seconds": round(t, 3),
             "cells_per_sec": round(FLEET / t, 3),
+            # only the grouped barrier/streamed legs instrument first-result
+            # latency; blank elsewhere rather than passing off total runtime
+            "first_result_s": (
+                round(first_cell[name], 3) if name in first_cell else ""
+            ),
         })
     return {
         "rows": rows,
         "sharded_vs_vmap": rates["sharded-fleet"] / rates["batched-vmap"],
         "sharded_vs_host": rates["sharded-fleet"] / rates["host-loop"],
+        "streamed_vs_barrier": rates["streamed-fleet"] / rates["barrier-grouped"],
+        "first_result_speedup": (
+            first_cell["barrier-grouped"] / first_cell["streamed-fleet"]
+        ),
     }
 
 
@@ -123,6 +168,8 @@ def run() -> None:
         derived=(
             f"sharded_vs_vmap={out['sharded_vs_vmap']:.2f}x;"
             f"sharded_vs_hostloop={out['sharded_vs_host']:.2f}x;"
+            f"streamed_vs_barrier={out['streamed_vs_barrier']:.2f}x;"
+            f"first_result_speedup={out['first_result_speedup']:.2f}x;"
             f"devices={len(jax.devices())}"
         ),
     )

@@ -41,6 +41,38 @@ print(f"  sharded fleet: {len(res)} cells across {len(jax.devices())} devices, "
       "bit-identical to single-device engine")
 EOF
 
+echo "== distributed smoke: 2-process x 2-device fleet vs single-device oracle =="
+# Gated on platform: the spawned workers force CPU host devices, which only
+# emulates a multi-host fleet when this host itself runs the CPU backend.
+if python -c "import jax; raise SystemExit(0 if jax.default_backend() == 'cpu' else 1)"; then
+    python -m repro.launch.distributed --processes 2 --local-devices 2 --check
+else
+    echo "  skipped (non-CPU backend: real hosts join via jax.distributed, not spawn)"
+fi
+
+echo "== streamed sweep: run_iter + journal resume bit-identical to barrier run =="
+python - <<'EOF'
+import pathlib
+import tempfile
+
+from repro.engine import fleet
+from repro.launch.distributed import _smoke_plan
+
+plan = _smoke_plan()  # 2 compile signatures, group sizes (3, 2): always padded
+runner = fleet.FleetRunner()
+barrier = runner.run(plan)
+assert dict(runner.run_iter(plan)) == dict(barrier.items()), "stream != barrier"
+with tempfile.TemporaryDirectory() as td:
+    journal = pathlib.Path(td) / "sweep.jsonl"
+    it = runner.run_iter(plan, journal=journal)
+    for _ in range(3):
+        next(it)  # retire only the first group, then abandon the sweep
+    it.close()
+    resumed = runner.run(plan, journal=journal)
+    assert dict(resumed.items()) == dict(barrier.items()), "resume != barrier"
+print(f"  streamed + resumed: {len(barrier)} cells bit-identical to barrier run")
+EOF
+
 echo "== autotune smoke: tuned ControlPolicy beats the default on a recorded trace =="
 python - <<'EOF'
 import jax
@@ -69,19 +101,6 @@ print(f"  {res.summary()}")
 print("autotune smoke OK")
 EOF
 
-echo "== hscc parity: engine vs recorded full-table snapshot (spot check) =="
-python - <<'EOF'
-import json, pathlib
-from repro.sim.runner import simulate
-
-snap = json.loads(pathlib.Path("scripts/hscc_parity_snapshot.json").read_text())
-sc = snap["scale"]
-for policy in ("hscc-4kb-mig", "hscc-2mb-mig"):
-    m = simulate("soplex", policy, intervals=sc["intervals"],
-                 accesses=sc["accesses"], seed=sc["seed"])
-    ref = snap["cells"]["soplex"][policy]
-    assert m.migrations == ref["migrations"] and abs(m.ipc - ref["ipc"]) < 1e-9, (
-        policy, m.migrations, ref)
-    print(f"  {policy:12s} matches snapshot (mig={m.migrations})")
-print("hscc snapshot spot-check OK (full table: scripts/validate_hscc_parity.py)")
-EOF
+echo "== hscc parity: STREAMED fleet vs recorded snapshot (spot check, rel-err 0.0) =="
+python scripts/validate_hscc_parity.py --stream --apps soplex
+echo "  (full table: scripts/validate_hscc_parity.py [--stream])"

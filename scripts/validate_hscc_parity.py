@@ -12,13 +12,22 @@ Modes:
               scripts/hscc_parity_snapshot.json from the engine results.  Only
               runnable at a git revision that still has the eager HSCC classes
               (they were deleted once this validation passed, PR 2).
+  --stream    run the table through the STREAMED fleet path (one SweepPlan,
+              FleetRunner.run_iter retiring groups incrementally) instead of
+              per-cell simulate().  Nothing is re-recorded: the streamed
+              results must match the snapshot EXACTLY (rel-err 0.0), which
+              pins streaming + sharding + padding to the recorded oracle.
+  --apps A,B  restrict to a comma-separated workload subset — the ci.sh leg
+              runs `--stream --apps soplex` so every CI pass regresses the
+              streamed path against the snapshot without the full-table cost.
   (default)   regression mode: compare the engine against the recorded
               snapshot — the durable equivalence oracle for the HSCC path.
 
-Run: PYTHONPATH=src python scripts/validate_hscc_parity.py [--record]
+Run: PYTHONPATH=src python scripts/validate_hscc_parity.py [--record|--stream]
 """
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
 import sys
@@ -42,9 +51,58 @@ def _relerr(a: float, b: float) -> float:
     return abs(a - b) / max(abs(a), abs(b), 1e-12)
 
 
+def _engine_rows_simulate(apps) -> dict[str, dict[str, dict]]:
+    return {
+        app: {p: _row(simulate(app, p, **SCALE)) for p in POLICIES}
+        for app in apps
+    }
+
+
+def _engine_rows_streamed(apps) -> dict[str, dict[str, dict]]:
+    """The whole table as ONE streamed fleet sweep (groups retire as they
+    finish; rows print in retirement order — the streaming is visible)."""
+    from repro.engine import fleet
+
+    plan = fleet.SweepPlan.grid(
+        list(apps), list(POLICIES), (SCALE["seed"],),
+        intervals=SCALE["intervals"], accesses=SCALE["accesses"],
+    )
+    rows: dict[str, dict[str, dict]] = {app: {} for app in apps}
+    t0 = time.time()
+    for i, (cell, m) in enumerate(fleet.FleetRunner().run_iter(plan)):
+        rows[cell.app][cell.policy] = _row(m)
+        print(
+            f"  [streamed {i + 1:3d}/{len(plan)} {time.time() - t0:5.0f}s] "
+            f"{cell.app:14s} {cell.policy:12s} mig={m.migrations:6d}",
+            flush=True,
+        )
+    return rows
+
+
 def main() -> int:
-    record = "--record" in sys.argv
-    if record:
+    ap = argparse.ArgumentParser(
+        description="HSCC engine-vs-snapshot parity over the workload table"
+    )
+    ap.add_argument("--record", action="store_true",
+                    help="re-record the snapshot from the eager references")
+    ap.add_argument("--stream", action="store_true",
+                    help="run through the streamed FleetRunner.run_iter path "
+                         "(must match the snapshot at rel-err 0.0)")
+    ap.add_argument("--apps", default=None,
+                    help="comma-separated workload subset (default: full table)")
+    args = ap.parse_args()
+    if args.record and args.stream:
+        ap.error("--record re-validates the eager path; it cannot be streamed")
+    if args.record and args.apps:
+        ap.error("--record rewrites the WHOLE snapshot; a subset would "
+                 "destroy the recorded full-table oracle")
+
+    apps = args.apps.split(",") if args.apps else workloads()
+    unknown = sorted(set(apps) - set(workloads()))
+    if unknown:
+        ap.error(f"unknown workloads {unknown}; known: {workloads()}")
+
+    if args.record:
         from repro.sim.policies import POLICY_CLASSES
 
         missing = [p for p in POLICIES if p not in POLICY_CLASSES]
@@ -56,18 +114,19 @@ def main() -> int:
             )
         from repro.sim.runner import simulate_eager
 
-    reference = None if record else json.loads(SNAPSHOT.read_text())["cells"]
-    engine_rows: dict[str, dict[str, dict]] = {}
-    worst = (0.0, None)
     t0 = time.time()
-    for app in workloads():
-        engine_rows[app] = {}
+    engine_rows = (
+        _engine_rows_streamed(apps) if args.stream
+        else _engine_rows_simulate(apps)
+    )
+    reference = None if args.record else json.loads(SNAPSHOT.read_text())["cells"]
+    worst = (0.0, None)
+    for app in apps:
         for policy in POLICIES:
-            eng = _row(simulate(app, policy, **SCALE))
-            engine_rows[app][policy] = eng
+            eng = engine_rows[app][policy]
             ref = (
                 _row(simulate_eager(app, policy, **SCALE))
-                if record
+                if args.record
                 else reference[app][policy]
             )
             errs = {f: _relerr(eng[f], ref[f]) for f in FIELDS}
@@ -80,21 +139,27 @@ def main() -> int:
                 f"mpki={eng['mpki']:10.4f} ipc={eng['ipc']:.4f}  {status}",
                 flush=True,
             )
-    if record:
+    if args.record:
         SNAPSHOT.write_text(
             json.dumps({"scale": SCALE, "fields": list(FIELDS),
                         "cells": engine_rows}, indent=1)
         )
         print(f"snapshot written: {SNAPSHOT}")
-    mode = "engine-vs-eager" if record else "engine-vs-snapshot"
+    mode = (
+        "engine-vs-eager" if args.record
+        else "streamed-fleet-vs-snapshot" if args.stream
+        else "engine-vs-snapshot"
+    )
     print(
-        f"hscc parity [{mode}] over {len(engine_rows)} workloads x "
+        f"hscc parity [{mode}] over {len(apps)} workloads x "
         f"{len(POLICIES)} policies in {time.time() - t0:.0f}s: "
         f"worst rel-err {worst[0]:.3e} at {worst[1]}"
     )
-    # exact parity was observed at this scale when the snapshot was recorded;
-    # tolerate float noise only
-    if worst[0] > 1e-6:
+    # exact parity was observed at this scale when the snapshot was recorded.
+    # The streamed fleet path is bit-identical by construction, so it gets NO
+    # float-noise allowance; the per-cell path tolerates noise only.
+    tol = 0.0 if args.stream else 1e-6
+    if worst[0] > tol:
         print("PARITY FAILURE")
         return 1
     print("PARITY OK")

@@ -20,7 +20,16 @@ and vmapped the seed fleet; this module owns the grid itself:
   FleetResult  maps every cell back to its SimMetrics, in plan order, with
                tag/field selection for figure scripts.
 
-One engine path from a single-CPU test to a multi-device parameter study:
+The mesh may span MULTIPLE jax processes (launch.mesh.make_fleet_mesh
+(processes=N) / launch.distributed): staging then feeds each process's
+addressable shards via make_array_from_callback and retire all-gathers each
+group's (tiny) stats to every process, so the SPMD result is bit-identical
+to the single-device path. `run_iter` streams (cell, metrics) pairs as each
+group retires — reusing the same double buffer — and an optional FleetJournal
+checkpoints retired groups so a killed sweep resumes from the last retired
+group (docs/fleet.md).
+
+One engine path from a single-CPU test to a multi-process parameter study:
 every paper_fig* module, sim.runner.sweep, sensitivity sweeps, and future
 autotuning searches declare a plan and render rows from the result.
 """
@@ -29,11 +38,17 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import hashlib
+import itertools
+import json
+import os
+import pathlib
 from typing import Any, Iterator, Mapping
 
 import jax
 import numpy as np
 from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 import repro.engine.simloop as simloop
@@ -78,6 +93,18 @@ class SweepCell:
     @property
     def label(self) -> str:
         return f"{self.app}/{self.policy}/seed={self.seed}"
+
+    def key(self) -> str:
+        """The journal key: the human label + a digest of EVERY cell field.
+
+        Two cells can share a label but differ in mc/intervals/control (e.g.
+        sensitivity sweeps), so resume matches on the full identity — a
+        journal recorded at one config can never satisfy another.
+        """
+        blob = repr((self.app, self.policy, self.seed, self.mc,
+                     self.intervals, self.accesses, self.counter_backend,
+                     self.control, self.tags))
+        return f"{self.label}#{hashlib.sha1(blob.encode()).hexdigest()[:10]}"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -220,12 +247,135 @@ def _pad_fleet(arrs, pad: int):
     )
 
 
+def _mesh_is_multiprocess(mesh) -> bool:
+    return len({d.process_index for d in mesh.devices.flat}) > 1
+
+
+@functools.lru_cache(maxsize=None)
+def _replicate_fn(mesh):
+    """jit identity resharding fleet-sharded outputs to fully-replicated.
+
+    The multi-process retire path: an all-gather over the fleet axis (gloo on
+    CPU, native on TPU) makes every shard addressable on every process, so
+    the per-group device_get and metric finalization stay SPMD-identical
+    everywhere — each process sees the SAME bytes it would single-process.
+    """
+    return jax.jit(lambda t: t, out_shardings=NamedSharding(mesh, P()))
+
+
+_journal_sync_ids = itertools.count()
+
+
+def _sync_journal_view(recorded: dict[str, "SimMetrics"]):
+    """Make process 0's journal view authoritative across a process fleet.
+
+    Resume decisions must be SPMD-identical: if one process's filesystem view
+    of the journal is stale (NFS attribute caches), it would stage groups its
+    peers skip and the collectives would deadlock. Process 0 broadcasts its
+    loaded records through the coordination-service KV store; everyone else
+    adopts them verbatim (the KV key carries a per-call sequence number, and
+    all processes call in the same order, so concurrent sweeps can't cross).
+    """
+    import jax
+
+    from repro.launch import distributed
+
+    key = f"fleet-journal/{next(_journal_sync_ids)}"
+    if jax.process_index() == 0:
+        distributed.kv_put(key, json.dumps(
+            {k: dataclasses.asdict(m) for k, m in recorded.items()}
+        ).encode())
+        return recorded
+    return {
+        k: SimMetrics(**fields)
+        for k, fields in json.loads(distributed.kv_get(key)).items()
+    }
+
+
+class FleetJournal:
+    """Append-only JSONL checkpoint of retired groups (streamed sweeps).
+
+    One header line, then one record per retired FleetGroup mapping each
+    cell's `SweepCell.key()` to its SimMetrics fields. A killed sweep leaves
+    at worst one torn tail line, which load() discards — resume re-runs that
+    group and every group after it, and appends to the same file. Only
+    process 0 of a multi-process fleet writes; every process reads (the
+    journal must live on a filesystem all workers share).
+    """
+
+    VERSION = 1
+
+    def __init__(self, path: str | os.PathLike):
+        self.path = pathlib.Path(path)
+
+    def load(self) -> dict[str, SimMetrics]:
+        """Completed cells keyed by SweepCell.key(); {} for a fresh journal."""
+        if not self.path.exists():
+            return {}
+        done: dict[str, SimMetrics] = {}
+        with self.path.open() as f:
+            for line in f:
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    break  # torn tail write from a kill; earlier lines stand
+                if rec.get("kind") == "fleet-journal":
+                    if rec.get("version") != self.VERSION:
+                        raise ValueError(
+                            f"{self.path}: journal version {rec.get('version')}"
+                            f" != {self.VERSION}"
+                        )
+                    continue
+                for key, fields in rec["cells"].items():
+                    done[key] = SimMetrics(**fields)
+        return done
+
+    def _drop_torn_tail(self) -> bool:
+        """Truncate a partial last line (kill mid-write) before appending.
+
+        load() already ignores the torn line; without this, the next append
+        would glue its record onto the fragment and corrupt it too. Returns
+        whether the file still has content (i.e. whether a header exists).
+        """
+        if not self.path.exists():
+            return False
+        with self.path.open("rb+") as f:
+            data = f.read()
+            if data and not data.endswith(b"\n"):
+                keep = data.rfind(b"\n") + 1
+                f.truncate(keep)
+                data = data[:keep]
+            return bool(data)
+
+    def append(self, cells: dict[SweepCell, SimMetrics]) -> None:
+        """Durably record one retired group (coordinator only, fsynced)."""
+        if jax.process_index() != 0:
+            return
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        lines = []
+        if not self._drop_torn_tail():
+            lines.append(json.dumps(
+                {"kind": "fleet-journal", "version": self.VERSION}
+            ))
+        lines.append(json.dumps({"cells": {
+            c.key(): dataclasses.asdict(m) for c, m in cells.items()
+        }}))
+        with self.path.open("a") as f:
+            f.write("".join(ln + "\n" for ln in lines))
+            f.flush()
+            os.fsync(f.fileno())
+
+
 class FleetRunner:
     """Run SweepPlans over a device mesh with double-buffered trace staging.
 
     mesh           1-D "fleet" mesh (default: make_fleet_mesh over all
                    devices; built lazily so constructing a runner never
-                   touches jax device state).
+                   touches jax device state). A multi-process mesh
+                   (make_fleet_mesh(processes=N)) works transparently: every
+                   process stages the full host batch, owns its device
+                   shards, and retire all-gathers each group's (tiny) stats
+                   back to every process.
     double_buffer  keep one group's sharded scan in flight while the next
                    group's traces are generated host-side and staged to the
                    mesh; False retires each group before staging the next
@@ -272,32 +422,63 @@ class FleetRunner:
             lambda x: np.broadcast_to(x, (len(group.cells) + pad,) + x.shape),
             state0,
         )
-        return jax.device_put(
-            (states, batch), batch_shardings((states, batch), mesh)
-        )
+        target = (states, batch)
+        shardings = batch_shardings(target, mesh)
+        if _mesh_is_multiprocess(mesh):
+            # device_put cannot target non-addressable devices; every process
+            # staged the same full host batch, so each contributes exactly
+            # the shards its local devices own.
+            return jax.tree.map(
+                lambda x, s: jax.make_array_from_callback(
+                    np.shape(x), s,
+                    lambda idx, _x=x: np.ascontiguousarray(_x[idx]),
+                ),
+                target, shardings,
+            )
+        return jax.device_put(target, shardings)
 
     # -- retire -------------------------------------------------------------
 
-    def _retire(self, group: FleetGroup, finals, stats, out: dict):
+    def _retire(self, group: FleetGroup, counters, stats, out: dict):
         """Block on one group's device results and finalize per-cell metrics."""
+        if _mesh_is_multiprocess(self.mesh):
+            counters, stats = _replicate_fn(self.mesh)((counters, stats))
         stats_h = jax.tree.map(np.asarray, stats)
-        counters_h = jax.tree.map(np.asarray, finals.sim.counters)
+        counters_h = jax.tree.map(np.asarray, counters)
         for i, cell in enumerate(group.cells):  # padding lanes are dropped
             per_cell = type(stats)(*(x[i] for x in stats_h))
             totals = totals_from_stats(
                 cell.policy, cell.mc, per_cell,
                 group.meta["accesses_per_interval"],
             )
-            counters = type(counters_h)(*(x[i] for x in counters_h))
+            per_counters = type(counters)(*(x[i] for x in counters_h))
             out[cell] = finalize_metrics(
-                cell.app, cell.policy, cell.mc, totals, counters,
+                cell.app, cell.policy, cell.mc, totals, per_counters,
                 group.meta["inst_per_access"], group.meta["footprint_pages"],
             )
 
     # -- the sweep ----------------------------------------------------------
 
-    def run(self, plan: SweepPlan) -> "FleetResult":
-        """Execute every cell of the plan; metrics come back in plan order."""
+    def run(
+        self,
+        plan: SweepPlan,
+        *,
+        stream: bool = False,
+        journal: str | os.PathLike | FleetJournal | None = None,
+    ) -> "FleetResult":
+        """Execute every cell of the plan; metrics come back in plan order.
+
+        `stream=True` (or any `journal`) routes through `run_iter` — groups
+        are retired to the host as soon as their sharded scan completes and,
+        with a journal, checkpointed so a killed sweep resumes from the last
+        retired group. Both paths are bit-identical; the barrier path is kept
+        as the differential reference the streamed path is tested against.
+        """
+        if stream or journal is not None:
+            metrics = dict(self.run_iter(plan, journal=journal))
+            return FleetResult(
+                cells=tuple(dict.fromkeys(plan.cells)), metrics=metrics
+            )
         groups = plan_groups(plan)
         metrics: dict[SweepCell, SimMetrics] = {}
         in_flight: collections.deque = collections.deque()
@@ -306,12 +487,65 @@ class FleetRunner:
             finals, stats = _sharded_fleet_fn(group.spec, self.mesh)(
                 states, chunks
             )  # async dispatch: returns before the mesh finishes
-            in_flight.append((group, finals, stats))
+            in_flight.append((group, finals.sim.counters, stats))
             while len(in_flight) >= (2 if self.double_buffer else 1):
                 self._retire(*in_flight.popleft(), metrics)
         while in_flight:
             self._retire(*in_flight.popleft(), metrics)
         return FleetResult(cells=tuple(dict.fromkeys(plan.cells)), metrics=metrics)
+
+    def run_iter(
+        self,
+        plan: SweepPlan,
+        *,
+        journal: str | os.PathLike | FleetJournal | None = None,
+    ) -> Iterator[tuple[SweepCell, SimMetrics]]:
+        """Stream (cell, metrics) pairs as each compile-signature group
+        retires, instead of blocking until the whole plan finishes.
+
+        The double buffer is reused: group i's results are device_get while
+        group i+1's traces are being staged, so consumers (figure renderers,
+        CSV writers, progress bars) overlap with device work. With `journal`,
+        every retired group is appended to the checkpoint first and groups
+        already recorded there are replayed from disk (yielded up front, in
+        plan order) without staging a single trace.
+        """
+        if journal is not None and not isinstance(journal, FleetJournal):
+            journal = FleetJournal(journal)
+        groups = plan_groups(plan)
+        pending: list[FleetGroup] = groups
+        if journal is not None:
+            recorded = journal.load()
+            if _mesh_is_multiprocess(self.mesh):
+                recorded = _sync_journal_view(recorded)
+            pending = []
+            for group in groups:
+                got = {c: recorded.get(c.key()) for c in group.cells}
+                if all(m is not None for m in got.values()):
+                    yield from got.items()  # resumed from the checkpoint
+                else:
+                    pending.append(group)
+
+        in_flight: collections.deque = collections.deque()
+
+        def retire_next():
+            out: dict[SweepCell, SimMetrics] = {}
+            group, counters, stats = in_flight.popleft()
+            self._retire(group, counters, stats, out)
+            if journal is not None:
+                journal.append(out)
+            return out.items()
+
+        for group in pending:
+            states, chunks = self._stage(group)
+            finals, stats = _sharded_fleet_fn(group.spec, self.mesh)(
+                states, chunks
+            )
+            in_flight.append((group, finals.sim.counters, stats))
+            while len(in_flight) >= (2 if self.double_buffer else 1):
+                yield from retire_next()
+        while in_flight:
+            yield from retire_next()
 
     # -- trace calibration (Fig. 1 / Tables I-II, no simulation) ------------
 

@@ -7,11 +7,23 @@ from repro.kernels.page_counter.page_counter import two_stage_count
 from repro.kernels.page_counter.ref import two_stage_count_ref
 
 
+def _kernel_mode(sp, force) -> str:
+    """Resolve the backend; zero-access chunks always take the ref oracle.
+
+    Pallas cannot slice a zero-length operand (grid of zero A-tiles), and an
+    empty interval's histograms are exactly the ref scatter's zeros — so the
+    TPU-default flip keeps working for degenerate chunks.
+    """
+    mode = force or ("pallas" if jax.default_backend() == "tpu" else "ref")
+    if sp.shape[0] == 0:
+        return "ref"
+    return mode
+
+
 def count_accesses(
     sp, page, weight, monitored, num_superpages, pages_per_sp, force=None
 ):
-    backend = jax.default_backend()
-    mode = force or ("pallas" if backend == "tpu" else "ref")
+    mode = _kernel_mode(sp, force)
     if mode in ("pallas", "interpret"):
         return two_stage_count(
             sp, page, weight, monitored, num_superpages, pages_per_sp,
@@ -35,8 +47,7 @@ def observe_counts(
     from repro.kernels.page_counter.page_counter import fused_observe_count
     from repro.kernels.page_counter.ref import fused_observe_count_ref
 
-    backend = jax.default_backend()
-    mode = force or ("pallas" if backend == "tpu" else "ref")
+    mode = _kernel_mode(sp, force)
     if mode in ("pallas", "interpret"):
         return fused_observe_count(
             sp, page, is_write, monitored, num_superpages, pages_per_sp,

@@ -21,13 +21,24 @@ def make_test_mesh(devices: int | None = None, model: int = 1):
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
-def make_fleet_mesh(devices: int | None = None):
+def make_fleet_mesh(devices: int | None = None, *, processes: int | None = None):
     """1-D mesh over all (or the first N) devices for homogeneous fleet axes.
 
     Sweep fleets (app x policy x seed x config cells of identical shape) are
     embarrassingly parallel, so a single "fleet" axis is the whole layout;
     engine.fleet pads the fleet to a multiple of the mesh size.
+
+    `processes=N` scales the fleet past one process: jax.distributed is
+    brought up first (launch.distributed — worker env / cluster detection;
+    must happen before jax touches its backends) and the mesh then spans the
+    GLOBAL device set of all N connected processes. Every process must build
+    the mesh and run the same plan (SPMD); engine.fleet gathers per-group
+    results to all processes on retire.
     """
+    if processes is not None:
+        from repro.launch import distributed
+
+        distributed.ensure_initialized(processes)
     n = devices or len(jax.devices())
     return jax.make_mesh((n,), ("fleet",))
 

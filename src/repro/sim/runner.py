@@ -238,12 +238,18 @@ def sweep(
     intervals: int = 5,
     accesses: int | None = None,
     counter_backend: str = "jax",
+    stream: bool = False,
+    journal=None,
 ) -> dict[tuple[str, str, int], SimMetrics]:
     """Fleet sweep: the (app x policy x seed) grid as ONE FleetRunner plan.
 
     Cells sharing a compile signature are fused onto the fleet axis, sharded
     across the device mesh, and double-buffered against host trace staging
     (engine.fleet). Returns {(app, policy, seed): metrics}.
+
+    `stream=True` retires groups through the incremental FleetRunner.run_iter
+    path and `journal` (a path) checkpoints retired groups so a killed sweep
+    resumes where it stopped — both bit-identical to the barrier path.
     """
     from repro.engine import fleet  # lazy: sim.__init__ imports this module
 
@@ -252,7 +258,7 @@ def sweep(
         intervals=intervals, accesses=accesses,
         counter_backend=counter_backend,
     )
-    result = fleet.FleetRunner().run(plan)
+    result = fleet.FleetRunner().run(plan, stream=stream, journal=journal)
     return {(c.app, c.policy, c.seed): m for c, m in result.items()}
 
 

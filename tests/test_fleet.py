@@ -6,6 +6,7 @@ per field — including the padded (fleet % devices != 0) path, so scaling a
 parameter study across devices can never change a paper figure.
 """
 import dataclasses
+import json
 import os
 import subprocess
 import sys
@@ -109,6 +110,29 @@ def test_require_uniform_meta_names_offender():
         simloop.require_uniform_meta([base, bad], ["seed=7", "seed=9"])
 
 
+def test_journal_append_after_torn_tail_recovers(tmp_path):
+    """A kill mid-write leaves a partial line; the NEXT append must truncate
+    it instead of gluing onto it, so no later load() discards valid groups."""
+    plan = fleet.SweepPlan.grid(["streamcluster"], ["rainbow"], (0, 1),
+                                intervals=1, accesses=1000)
+    cell_a, cell_b = plan.cells
+    m_a, m_b = _dummy_metrics(cell_a), _dummy_metrics(cell_b)
+    path = tmp_path / "j.jsonl"
+    journal = fleet.FleetJournal(path)
+    journal.append({cell_a: m_a})
+    with path.open("ab") as f:
+        f.write(b'{"cells": {"torn')  # the kill: no trailing newline
+    journal.append({cell_b: m_b})
+    loaded = journal.load()
+    assert loaded == {cell_a.key(): m_a, cell_b.key(): m_b}
+    # a journal whose ONLY line is torn re-writes the header too
+    path2 = tmp_path / "j2.jsonl"
+    path2.write_bytes(b'{"kind": "fleet-jour')
+    fleet.FleetJournal(path2).append({cell_a: m_a})
+    assert fleet.FleetJournal(path2).load() == {cell_a.key(): m_a}
+    assert json.loads(path2.read_text().splitlines()[0])["kind"] == "fleet-journal"
+
+
 def test_calibration_mode_matches_direct_stats():
     from repro.sim import trace as trace_mod
 
@@ -119,6 +143,171 @@ def test_calibration_mode_matches_direct_stats():
     )
     assert got == want
     assert 0 < got["hot_page_pct_measured"] <= 100
+
+
+# ---------------------------------------------------------------------------
+# Property tests of the plan/grouping/selection layer (pure host-side: no
+# device work — plan_groups probes trace meta without generating an access).
+# The invariants are plain functions so deterministic edge cases run even
+# where hypothesis is absent (the optional-dependency convention of
+# tests/test_core_*), and hypothesis feeds generated plans where it exists.
+# ---------------------------------------------------------------------------
+
+PROP_APPS = ["streamcluster", "soplex", "mcf", "mix1"]
+PROP_POLICIES = ["rainbow", "flat-static", "hscc-2mb-mig", "dram-only"]
+
+
+def check_plan_groups_roundtrip(plan: fleet.SweepPlan):
+    """plan_groups loses no cell, duplicates none, and groups homogeneously."""
+    groups = fleet.plan_groups(plan)
+    grouped = [c for g in groups for c in g.cells]
+    assert len(grouped) == len(set(grouped)), "cell duplicated across groups"
+    assert set(grouped) == set(plan.cells), "cell lost (or invented)"
+    for g in groups:
+        metas = [
+            fleet.trace_mod.probe_meta(c.app, c.accesses) for c in g.cells
+        ]
+        assert all(m == g.meta for m in metas), "mixed shapes in one group"
+        assert all(
+            (c.policy, c.counter_backend, c.mc, c.control, c.intervals)
+            == (g.spec.policy, g.spec.counter_backend, g.spec.mc,
+                g.spec.control, g.intervals)
+            for c in g.cells
+        ), "mixed compile signatures in one group"
+
+
+def check_selection_consistency(plan: fleet.SweepPlan, filters: dict):
+    """FleetResult.select/one/rows agree with a hand-rolled plan filter."""
+    cells = tuple(dict.fromkeys(plan.cells))
+    res = fleet.FleetResult(
+        cells=cells, metrics={c: _dummy_metrics(c) for c in cells}
+    )
+    fields = {f.name for f in dataclasses.fields(fleet.SweepCell)}
+    want = [
+        c for c in cells
+        if all(
+            (getattr(c, k) if k in fields else c.tag.get(k)) == v
+            for k, v in filters.items()
+        )
+    ]
+    got = res.select(**filters)
+    assert [c for c, _ in got] == want
+    assert all(m is res.metrics[c] for c, m in got)
+    if len(want) == 1:
+        assert res.one(**filters) is res.metrics[want[0]]
+    else:
+        with pytest.raises(KeyError, match=f"matched {len(want)} cells"):
+            res.one(**filters)
+    rows = res.rows(**filters)
+    assert len(rows) == len(want)
+    for c, row in zip(want, rows):
+        assert row["seed"] == c.seed
+        for k, v in c.tags:
+            assert row[k] == v
+
+
+def _dummy_metrics(cell: fleet.SweepCell):
+    from repro.sim.runner import SimMetrics
+
+    return SimMetrics(
+        app=cell.app, policy=cell.policy, instructions=1.0, total_cycles=1.0,
+        ipc=1.0, mpki=0.0, tlb_service_cycles=0.0, tlb_service_frac=0.0,
+        breakdown={}, migrations=0, evictions=0, shootdowns=0, mig_bytes=0.0,
+        footprint_bytes=1.0, traffic_ratio=0.0, energy={},
+    )
+
+
+def test_plan_groups_roundtrip_edge_cases():
+    """Deterministic floor under the property: empty, size-1, dup, mixed."""
+    check_plan_groups_roundtrip(fleet.SweepPlan(cells=()))
+    one = fleet.SweepPlan.grid(["soplex"], ["rainbow"], (1,), intervals=1,
+                               accesses=1000)
+    check_plan_groups_roundtrip(one)
+    mixed = (
+        one + one  # exact duplicates must collapse, not double-run
+        + fleet.SweepPlan.grid(PROP_APPS, PROP_POLICIES, (1, 2), intervals=1,
+                               accesses=1000)
+        + fleet.SweepPlan.grid(["soplex"], ["rainbow"], (1,),
+                               mc=MachineConfig(top_n=50), intervals=1,
+                               accesses=1000)
+    )
+    check_plan_groups_roundtrip(mixed)
+    assert len(fleet.plan_groups(fleet.SweepPlan(cells=()))) == 0
+
+
+def test_selection_consistency_edge_cases():
+    check_selection_consistency(fleet.SweepPlan(cells=()), {})
+    check_selection_consistency(fleet.SweepPlan(cells=()), {"app": "soplex"})
+    tagged = fleet.SweepPlan.grid(
+        ["soplex"], ["rainbow"], (1, 2), intervals=1, accesses=1000,
+        tags=(("sweep", "s"),),
+    )
+    check_selection_consistency(tagged, {"seed": 1})
+    check_selection_consistency(tagged, {"sweep": "s"})
+    check_selection_consistency(tagged, {"sweep": "other"})
+
+
+try:  # optional, as in tests/test_core_*: property layer on the same checks
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover - exercised via the edge-case tests
+    st = None
+
+if st is not None:
+
+    def _grids():
+        return st.builds(
+            lambda apps, policies, seeds, intervals, accesses, tags: (
+                fleet.SweepPlan.grid(
+                    apps, policies, tuple(seeds), intervals=intervals,
+                    accesses=accesses, tags=tags,
+                )
+            ),
+            apps=st.lists(st.sampled_from(PROP_APPS), min_size=0, max_size=3,
+                          unique=True),
+            policies=st.lists(st.sampled_from(PROP_POLICIES), min_size=0,
+                              max_size=3, unique=True),
+            seeds=st.lists(st.integers(0, 5), min_size=0, max_size=3,
+                           unique=True),
+            intervals=st.integers(1, 3),
+            accesses=st.sampled_from([None, 1000, 2000]),
+            tags=st.sampled_from([
+                (), (("sweep", "a"),), (("sweep", "b"), ("setting", 1)),
+            ]),
+        )
+
+    def _plans():
+        return st.lists(_grids(), min_size=0, max_size=3).map(
+            lambda gs: sum(gs, fleet.SweepPlan(cells=()))
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(_plans())
+    def test_plan_groups_roundtrip_property(plan):
+        check_plan_groups_roundtrip(plan)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        _plans(),
+        st.dictionaries(
+            st.sampled_from(["app", "policy", "seed", "sweep", "setting"]),
+            st.sampled_from(["streamcluster", "soplex", "rainbow", "a", "b",
+                             1, 2]),
+            max_size=2,
+        ),
+    )
+    def test_selection_consistency_property(plan, filters):
+        check_selection_consistency(plan, filters)
+
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_plan_groups_roundtrip_property():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_selection_consistency_property():
+        pass
 
 
 def test_sharded_fleet_bit_identical_on_4_devices():

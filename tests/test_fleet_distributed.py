@@ -1,0 +1,138 @@
+"""Differential harness for the multi-process / streamed / resumed fleet.
+
+Every new execution path of the scale-out (multi-process shard_map, streamed
+run_iter retirement, journal resume) is pinned to the SAME oracle: the
+single-device vmap engine. The tests run workers in subprocesses because
+jax.distributed can be initialized only once per process (and forcing host
+device counts must happen before jax touches its backends) — see
+docs/fleet.md "Troubleshooting".
+
+The shared smoke plan (launch.distributed._smoke_plan) is adversarial by
+construction: two compile signatures (streamcluster vs soplex shapes) and
+group sizes (3, 2) that divide no even mesh, so every leg exercises the
+non-divisible padding path.
+"""
+import functools
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TIMEOUT = 600
+
+
+def _run_script(script: str):
+    env = dict(os.environ, PYTHONPATH="src")
+    return subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(script)],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=TIMEOUT,
+    )
+
+
+@functools.lru_cache(maxsize=1)
+def _reference_result():
+    """Single-device (vmap-path) barrier oracle for the shared smoke plan."""
+    from repro.engine import fleet
+    from repro.launch.distributed import _smoke_plan
+
+    return fleet.FleetRunner().run(_smoke_plan())
+
+
+def _reference_rows():
+    from repro.launch.distributed import _result_rows
+
+    return _result_rows(_reference_result())
+
+
+def test_two_process_fleet_bit_identical(tmp_path):
+    """2 spawned processes x 2 forced devices == single-device vmap, bitwise.
+
+    The worker side (launch.distributed._worker_main) additionally asserts
+    the mesh really spans both processes and that the in-fleet streamed
+    run_iter equals the in-fleet barrier run — so a pass here certifies the
+    whole chain: spawn -> jax.distributed bring-up -> cross-process staging
+    (make_array_from_callback) -> sharded scan -> all-gather retire.
+    """
+    out = tmp_path / "fleet_rows.json"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.distributed",
+         "--processes", "2", "--local-devices", "2", "--out", str(out)],
+        capture_output=True, text=True, cwd=ROOT, timeout=TIMEOUT,
+        env=dict(os.environ, PYTHONPATH="src"),
+    )
+    assert r.returncode == 0, r.stderr[-4000:]
+    fleet_rows = json.loads(out.read_text())
+    assert fleet_rows == _reference_rows()
+
+
+def test_streamed_run_iter_matches_barrier_run_cell_by_cell():
+    """run_iter == run, cell for cell (in-parent; the multi-device streamed
+    equality runs inside the 2x2 fleet worker of the test above)."""
+    from repro.engine import fleet
+    from repro.launch.distributed import _smoke_plan
+
+    plan = _smoke_plan()
+    barrier = _reference_result()
+    streamed = list(fleet.FleetRunner().run_iter(plan))
+    assert len(streamed) == len(barrier) == 5
+    for cell, metrics in streamed:
+        assert metrics == barrier[cell], cell.label
+    # run(stream=True) is the same path wrapped into a FleetResult
+    res = fleet.FleetRunner().run(plan, stream=True)
+    assert dict(res.items()) == dict(barrier.items())
+
+
+def test_kill_and_resume_matches_uninterrupted(tmp_path):
+    """A hard-killed streamed sweep resumes from the journal, bit-identically.
+
+    Worker 1 retires exactly one group then os._exit's (no cleanup, the
+    real kill shape); worker 2 resumes against the same journal and must
+    (a) not recompute the journaled group and (b) reproduce the oracle.
+    """
+    journal = tmp_path / "sweep.journal.jsonl"
+    rows_out = tmp_path / "resumed_rows.json"
+
+    killed = _run_script(f"""
+        import os
+        from repro.engine import fleet
+        from repro.launch.distributed import _smoke_plan
+
+        plan = _smoke_plan()
+        (g0, g1) = fleet.plan_groups(plan)
+        it = fleet.FleetRunner().run_iter(plan, journal={str(journal)!r})
+        for _ in g0.cells:
+            next(it)
+        os._exit(41)  # killed mid-sweep: the generator never finalizes
+    """)
+    assert killed.returncode == 41, killed.stderr[-4000:]
+    lines = journal.read_text().splitlines()
+    assert len(lines) == 2  # header + exactly the first retired group
+    assert json.loads(lines[0])["kind"] == "fleet-journal"
+    first_group_keys = set(json.loads(lines[1])["cells"])
+
+    resumed = _run_script(f"""
+        import json
+        from repro.engine import fleet
+        from repro.launch.distributed import _result_rows, _smoke_plan
+
+        plan = _smoke_plan()
+        runner = fleet.FleetRunner()
+        staged = []
+        real_stage = runner._stage
+        runner._stage = lambda g: (staged.append(g), real_stage(g))[1]
+        res = runner.run(plan, journal={str(journal)!r})
+        # group 0 must come from the journal, not from a re-run
+        assert [len(g.cells) for g in staged] == [2], staged
+        json.dump(_result_rows(res), open({str(rows_out)!r}, "w"))
+        print("RESUME_OK")
+    """)
+    assert "RESUME_OK" in resumed.stdout, resumed.stderr[-4000:]
+    assert json.loads(rows_out.read_text()) == _reference_rows()
+
+    # the journal now holds both groups; group 0 was appended exactly once
+    lines = journal.read_text().splitlines()
+    assert len(lines) == 3
+    assert set(json.loads(lines[1])["cells"]) == first_group_keys
+    assert set(json.loads(lines[2])["cells"]).isdisjoint(first_group_keys)

@@ -1,4 +1,18 @@
-"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+"""Pallas kernels vs pure-jnp oracles: ONE parity matrix across backends.
+
+The matrix is the ready gate for flipping the TPU default backend (ROADMAP):
+every accelerated kernel with a ref oracle — the fused observe counter, the
+two-stage counter, block_gather, and rainbow (paged decode) attention — is
+checked through the same parametrized sweep of backend x dtype x odd shapes,
+including the degenerate chunks the engine can legitimately produce
+(zero-access intervals, single monitored row, single block, no valid
+migration lanes). On CPU the kernel leg runs the Pallas interpreter; on a
+real TPU the SAME matrix additionally runs compiled ("pallas"), so hardware
+bring-up needs no new tests.
+
+Integer kernels must match bit-for-bit (tol None); float kernels to
+accumulation tolerance.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,69 +20,145 @@ import pytest
 
 from repro.kernels.block_gather.ops import migrate_blocks
 from repro.kernels.flash_attention.ops import attention
-from repro.kernels.page_counter.ops import count_accesses
+from repro.kernels.page_counter.ops import count_accesses, observe_counts
 from repro.kernels.rainbow_attention.ops import paged_decode_attention
 
-
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-@pytest.mark.parametrize("b,hp,kvs,hd,block,nblk", [
-    (1, 4, 4, 16, 4, 3),
-    (2, 8, 4, 32, 8, 6),
-    (3, 8, 2, 64, 16, 4),
-])
-def test_rainbow_attention_sweep(b, hp, kvs, hd, block, nblk, dtype):
-    key = jax.random.PRNGKey(b * 7 + hp)
-    npool = b * nblk + 4
-    q = jax.random.normal(key, (b, hp, hd), dtype)
-    pk = jax.random.normal(jax.random.PRNGKey(1), (npool, block, kvs, hd), dtype)
-    pv = jax.random.normal(jax.random.PRNGKey(2), (npool, block, kvs, hd), dtype)
-    vidx = jax.random.randint(jax.random.PRNGKey(3), (b, nblk), 0, npool)
-    length = jnp.int32(nblk * block - 2)
-    ref = paged_decode_attention(q, pk, pv, vidx, length, force="ref")
-    ker = paged_decode_attention(q, pk, pv, vidx, length, force="interpret")
-    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
-    np.testing.assert_allclose(
-        np.asarray(ker, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
-    )
+PARITY_BACKENDS = (
+    ("interpret", "pallas") if jax.default_backend() == "tpu"
+    else ("interpret",)
+)
 
 
-@pytest.mark.parametrize("a,nsp,pages,n", [(100, 16, 8, 4), (1000, 32, 16, 8),
-                                           (517, 8, 32, 2)])
-def test_page_counter_sweep(a, nsp, pages, n, rng):
+# -- case builders: closure(force, rng) -> (ref_outs, kernel_outs, tol) ------
+
+
+def _counting_inputs(rng, a, nsp, pages, n):
     sp = jnp.asarray(rng.integers(-1, nsp, a).astype(np.int32))
     pg = jnp.asarray(rng.integers(0, pages, a).astype(np.int32))
-    w = jnp.asarray(rng.integers(1, 4, a).astype(np.uint32))
-    mon = jnp.asarray(
-        np.concatenate([rng.choice(nsp, n - 1, replace=False), [-1]]).astype(np.int32)
-    )
-    s1r, s2r = count_accesses(sp, pg, w, mon, nsp, pages, force="ref")
-    s1k, s2k = count_accesses(sp, pg, w, mon, nsp, pages, force="interpret")
-    np.testing.assert_array_equal(np.asarray(s1r, np.int64), np.asarray(s1k, np.int64))
-    np.testing.assert_array_equal(np.asarray(s2r, np.int64), np.asarray(s2k, np.int64))
+    wr = jnp.asarray(rng.random(a) < 0.3)
+    mon = np.full(n, -1, np.int32)  # -1 holes: partially-filled monitor set
+    mon[: max(n - 1, 1)] = rng.choice(nsp, max(n - 1, 1), replace=False)
+    return sp, pg, wr, jnp.asarray(mon)
 
 
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-@pytest.mark.parametrize("nb,hot,k", [(24, 6, 6), (8, 3, 5), (64, 16, 1)])
-def test_block_gather_sweep(nb, hot, k, dtype, rng):
-    cap = jax.random.normal(jax.random.PRNGKey(0), (nb, 4, 2, 8), dtype)
-    hotp = jax.random.normal(jax.random.PRNGKey(1), (hot, 4, 2, 8), dtype)
-    src = jnp.asarray(rng.integers(-1, nb, k).astype(np.int32))
-    dst_pool = rng.choice(hot, min(k, hot), replace=False)
-    dst = jnp.asarray(
-        np.resize(dst_pool, k).astype(np.int32)
-    )
-    # ensure valid lanes have unique dst
-    srcs = np.array(src)  # writable copy
-    seen = set()
-    for i in range(k):
-        if srcs[i] >= 0 and int(dst[i]) in seen:
-            srcs[i] = -1
-        elif srcs[i] >= 0:
-            seen.add(int(dst[i]))
-    src = jnp.asarray(srcs)
-    r = migrate_blocks(cap, hotp, src, dst, force="ref")
-    kk = migrate_blocks(cap, hotp, src, dst, force="interpret")
-    np.testing.assert_array_equal(np.asarray(r, np.float32), np.asarray(kk, np.float32))
+def _two_stage(a, nsp, pages, n):
+    def run(force, rng):
+        sp, pg, wr, mon = _counting_inputs(rng, a, nsp, pages, n)
+        w = jnp.where(wr, 2, 1).astype(jnp.uint32)
+        ref = count_accesses(sp, pg, w, mon, nsp, pages, force="ref")
+        ker = count_accesses(sp, pg, w, mon, nsp, pages, force=force)
+        return ref, ker, None
+
+    return run
+
+
+def _fused_observe(a, nsp, pages, n, write_weight):
+    def run(force, rng):
+        sp, pg, wr, mon = _counting_inputs(rng, a, nsp, pages, n)
+        kw = dict(write_weight=write_weight)
+        ref = observe_counts(sp, pg, wr, mon, nsp, pages, force="ref", **kw)
+        ker = observe_counts(sp, pg, wr, mon, nsp, pages, force=force, **kw)
+        return ref, ker, None
+
+    return run
+
+
+def _block_gather(nb, hot, k, dtype, all_invalid=False):
+    def run(force, rng):
+        cap = jax.random.normal(jax.random.PRNGKey(0), (nb, 4, 2, 8), dtype)
+        hotp = jax.random.normal(jax.random.PRNGKey(1), (hot, 4, 2, 8), dtype)
+        src = rng.integers(-1, nb, k).astype(np.int32)
+        if all_invalid:
+            src[:] = -1  # an interval that migrates nothing
+        dst = np.resize(rng.choice(hot, min(k, hot), replace=False),
+                        k).astype(np.int32)
+        seen = set()  # valid lanes must target unique dst slots
+        for i in range(k):
+            if src[i] >= 0 and int(dst[i]) in seen:
+                src[i] = -1
+            elif src[i] >= 0:
+                seen.add(int(dst[i]))
+        src, dst = jnp.asarray(src), jnp.asarray(dst)
+        ref = migrate_blocks(cap, hotp, src, dst, force="ref")
+        ker = migrate_blocks(cap, hotp, src, dst, force=force)
+        return (ref,), (ker,), None  # gather moves bits: exact in any dtype
+
+    return run
+
+
+def _rainbow_attention(b, hp, kvs, hd, block, nblk, dtype):
+    def run(force, rng):
+        npool = b * nblk + 4
+        q = jax.random.normal(jax.random.PRNGKey(b * 7 + hp), (b, hp, hd), dtype)
+        pk = jax.random.normal(jax.random.PRNGKey(1), (npool, block, kvs, hd), dtype)
+        pv = jax.random.normal(jax.random.PRNGKey(2), (npool, block, kvs, hd), dtype)
+        vidx = jax.random.randint(jax.random.PRNGKey(3), (b, nblk), 0, npool)
+        length = jnp.int32(max(nblk * block - 2, 1))
+        ref = paged_decode_attention(q, pk, pv, vidx, length, force="ref")
+        ker = paged_decode_attention(q, pk, pv, vidx, length, force=force)
+        return (ref,), (ker,), (2e-2 if dtype == jnp.bfloat16 else 2e-5)
+
+    return run
+
+
+def _dtype_tag(dtype):
+    return "bf16" if dtype == jnp.bfloat16 else "f32"
+
+
+PARITY_MATRIX = [
+    # two-stage counter: baseline / odd lengths / single row / single sp
+    pytest.param(_two_stage(100, 16, 8, 4), id="two_stage-100a"),
+    pytest.param(_two_stage(517, 8, 32, 2), id="two_stage-517a"),
+    pytest.param(_two_stage(1000, 32, 16, 8), id="two_stage-1000a"),
+    pytest.param(_two_stage(0, 16, 8, 4), id="two_stage-zero_access"),
+    pytest.param(_two_stage(129, 8, 8, 1), id="two_stage-single_row"),
+    pytest.param(_two_stage(64, 1, 4, 1), id="two_stage-single_sp"),
+    # fused observe counter (read/write split + write weighting)
+    pytest.param(_fused_observe(300, 16, 8, 4, 3), id="fused_observe-300a"),
+    pytest.param(_fused_observe(517, 8, 32, 2, 2), id="fused_observe-517a"),
+    pytest.param(_fused_observe(0, 16, 8, 4, 2), id="fused_observe-zero_access"),
+    pytest.param(_fused_observe(129, 8, 8, 1, 2), id="fused_observe-single_row"),
+]
+for dt in (jnp.float32, jnp.bfloat16):
+    tag = _dtype_tag(dt)
+    PARITY_MATRIX += [
+        # block gather: baseline / overflow lanes / single lane / no lanes
+        pytest.param(_block_gather(24, 6, 6, dt), id=f"block_gather-{tag}-24nb"),
+        pytest.param(_block_gather(8, 3, 5, dt), id=f"block_gather-{tag}-8nb"),
+        pytest.param(_block_gather(64, 16, 1, dt),
+                     id=f"block_gather-{tag}-single_lane"),
+        pytest.param(_block_gather(16, 4, 4, dt, all_invalid=True),
+                     id=f"block_gather-{tag}-no_valid_lanes"),
+        # rainbow paged decode attention: sweep + single-block edge
+        pytest.param(_rainbow_attention(1, 4, 4, 16, 4, 3, dt),
+                     id=f"rainbow_attn-{tag}-3blk"),
+        pytest.param(_rainbow_attention(2, 8, 4, 32, 8, 6, dt),
+                     id=f"rainbow_attn-{tag}-6blk"),
+        pytest.param(_rainbow_attention(3, 8, 2, 64, 16, 4, dt),
+                     id=f"rainbow_attn-{tag}-4blk"),
+        pytest.param(_rainbow_attention(2, 4, 2, 32, 8, 1, dt),
+                     id=f"rainbow_attn-{tag}-single_block"),
+    ]
+
+
+@pytest.mark.parametrize("backend", PARITY_BACKENDS)
+@pytest.mark.parametrize("case", PARITY_MATRIX)
+def test_kernel_parity_matrix(case, backend, rng):
+    refs, kers, tol = case(backend, rng)
+    for r, k in zip(refs, kers):
+        if tol is None:  # float64 is exact for uint32 counts and bf16 blocks
+            np.testing.assert_array_equal(
+                np.asarray(k, np.float64), np.asarray(r, np.float64)
+            )
+        else:
+            np.testing.assert_allclose(
+                np.asarray(k, np.float32), np.asarray(r, np.float32),
+                atol=tol, rtol=tol,
+            )
+
+
+# -- flash attention keeps its own sweep (no engine-facing ref-vs-default
+#    dispatch to gate; tolerances are seq-length dependent) ------------------
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
