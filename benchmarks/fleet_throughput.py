@@ -14,6 +14,13 @@ cells/sec over a homogeneous 32-cell fleet (one app x policy, many seeds):
               FleetRunner.run_iter (each group retired as its scan finishes);
               total cells/sec should tie — the streamed win is
               time-to-first-result (first_result_s column)
+  staged-scenario/fused-scenario
+              the same fleet on a workload SCENARIO (repro.workloads): traces
+              materialized host-side from the generator stream and staged
+              (the differential-oracle path) vs synthesized INSIDE the
+              sharded engine scan (EngineSpec.source) — the fused leg stages
+              only a seed vector, so generation rides the mesh instead of
+              the host (target: >= 1.2x staged cells/sec on 4 host devices)
 
 The fleet axis needs enough lanes for device parallelism to beat the vmap
 lanes' vectorization (per-scan-step op overhead dominates small fleets on
@@ -46,6 +53,11 @@ import numpy as np
 from benchmarks.common import QUICK, emit
 
 APP = "streamcluster"
+# The staged/fused contrast is staging-bound, so the scenario legs use a
+# footprint large enough that host materialization (which, like the numpy
+# app path, re-derives the interval-invariant setup every interval) is a
+# real cost; the fused scan runs setup once per simulation.
+SCENARIO = "stress/zipf-hotspot"
 POLICY = "rainbow"
 FLEET = 32
 INTERVALS = 3 if QUICK else 6
@@ -124,10 +136,32 @@ def _measure() -> dict:
             if i == 0:
                 first_cell["streamed-fleet"] = time.perf_counter() - t0
 
+    # Fused-generation leg: the same seed fleet on a workload scenario,
+    # staged (host materialization of the generator stream -> device_put)
+    # vs fused (chunks synthesized inside the sharded scan; only a seed
+    # vector is staged).  Same cells, bit-identical metrics — the delta is
+    # purely where trace generation runs.
+    staged_plan = fleet.SweepPlan.grid(
+        apps=[SCENARIO], policies=[POLICY], seeds=tuple(seeds),
+        intervals=INTERVALS, accesses=ACCESSES,
+    )
+    fused_plan = fleet.SweepPlan.grid(
+        policies=[POLICY], seeds=tuple(seeds), scenario=[SCENARIO],
+        intervals=INTERVALS, accesses=ACCESSES,
+    )
+
+    def staged_scenario():
+        runner.run(staged_plan)
+
+    def fused_scenario():
+        runner.run(fused_plan)
+
     modes = [("host-loop", host_loop, 1), ("batched-vmap", batched, 2),
              ("sharded-fleet", sharded, 2),
              ("barrier-grouped", barrier_grouped, 2),
-             ("streamed-fleet", streamed_grouped, 2)]
+             ("streamed-fleet", streamed_grouped, 2),
+             ("staged-scenario", staged_scenario, 2),
+             ("fused-scenario", fused_scenario, 2)]
     rows, rates = [], {}
     simulate(APP, POLICY, mc, intervals=INTERVALS, accesses=ACCESSES,
              seed=seeds[0])  # warm the single-cell compile for host-loop
@@ -157,6 +191,7 @@ def _measure() -> dict:
         "first_result_speedup": (
             first_cell["barrier-grouped"] / first_cell["streamed-fleet"]
         ),
+        "fused_vs_staged": rates["fused-scenario"] / rates["staged-scenario"],
     }
 
 
@@ -170,6 +205,7 @@ def run() -> None:
             f"sharded_vs_hostloop={out['sharded_vs_host']:.2f}x;"
             f"streamed_vs_barrier={out['streamed_vs_barrier']:.2f}x;"
             f"first_result_speedup={out['first_result_speedup']:.2f}x;"
+            f"fused_vs_staged={out['fused_vs_staged']:.2f}x;"
             f"devices={len(jax.devices())}"
         ),
     )

@@ -1,8 +1,11 @@
-"""Quickstart: the Rainbow core library in 60 lines.
+"""Quickstart: the Rainbow core library, then a full scenario simulation.
 
-Drives the paper's mechanism directly: synthesize a hot/cold access stream,
-run two monitoring intervals (stage-1 counting -> top-N -> stage-2 counting ->
-utility admission), and watch translations redirect to the fast tier.
+Part 1 drives the paper's mechanism directly: synthesize a hot/cold access
+stream, run two monitoring intervals (stage-1 counting -> top-N -> stage-2
+counting -> utility admission), and watch translations redirect to the fast
+tier. Part 2 runs one registered workload scenario end-to-end through the
+device-resident engine — trace generation fused into the scan — and compares
+policies on it (docs/workloads.md).
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
@@ -53,3 +56,21 @@ print("  in fast tier:", in_fast.tolist())
 print("  fast-tier slots:", slot.tolist())
 print("\nThe superpage itself was never splintered: translations for its cold")
 print("pages still resolve through the (intact) superpage entry.")
+
+# --- Part 2: one scenario preset, end to end through the engine ------------
+# A registered workload scenario (repro.workloads) is a first-class workload
+# name: simulate() runs it with the trace generator FUSED into the engine's
+# interval scan (fused=True stages nothing host-side), and the staged path
+# materializes the same generator stream as the bit-identical oracle.
+from repro.sim.runner import simulate  # noqa: E402
+
+SCENARIO = "stress/phase-shift"  # working-set drift: hot window slides 50%/interval
+print(f"\nscenario {SCENARIO!r}, fused in-scan generation:")
+for policy in ("rainbow", "hscc-2mb-mig", "flat-static"):
+    m = simulate(SCENARIO, policy, intervals=3, accesses=4000, fused=True)
+    print(f"  {policy:12s} ipc={m.ipc:.4f} mpki={m.mpki:.3f} "
+          f"migrations={m.migrations:4d} traffic={m.mig_bytes/2**20:.1f}MiB")
+staged = simulate(SCENARIO, "rainbow", intervals=3, accesses=4000)
+fused = simulate(SCENARIO, "rainbow", intervals=3, accesses=4000, fused=True)
+assert staged.ipc == fused.ipc and staged.migrations == fused.migrations
+print("staged oracle == fused path, bit for bit (docs/workloads.md)")

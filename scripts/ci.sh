@@ -41,6 +41,30 @@ print(f"  sharded fleet: {len(res)} cells across {len(jax.devices())} devices, "
       "bit-identical to single-device engine")
 EOF
 
+echo "== scenario smoke: fused in-scan generation vs staged oracle on a 4-device fleet =="
+XLA_FLAGS="--xla_force_host_platform_device_count=4" python - <<'EOF'
+import jax
+from repro.engine import fleet
+from repro.sim.runner import simulate
+
+assert len(jax.devices()) == 4, jax.devices()
+plan = fleet.SweepPlan.grid(
+    policies=["rainbow", "flat-static"], seeds=(0, 1, 2),
+    scenario=["stress/zipf-hotspot", "stress/seq-scan"],
+    intervals=2, accesses=3000,
+)  # 4 fused groups of 3 cells each, all padded to the 4-device mesh
+res = fleet.FleetRunner().run(plan)
+assert len(res) == 12
+for name in ("stress/zipf-hotspot", "stress/seq-scan"):
+    fused = res.one(app=name, policy="rainbow", seed=2)
+    staged = simulate(name, "rainbow", intervals=2, accesses=3000, seed=2)
+    assert fused.ipc == staged.ipc and fused.migrations == staged.migrations, (
+        name, fused, staged)
+    assert fused.total_cycles == staged.total_cycles
+print(f"  scenario fleet: {len(res)} fused cells across "
+      f"{len(jax.devices())} devices, bit-identical to the staged oracle")
+EOF
+
 echo "== distributed smoke: 2-process x 2-device fleet vs single-device oracle =="
 # Gated on platform: the spawned workers force CPU host devices, which only
 # emulates a multi-host fleet when this host itself runs the CPU backend.

@@ -74,6 +74,13 @@ class SweepCell:
     ControlPolicy (the unified surface of engine.policy) — sweeps over
     (interval_steps, top_n, threshold_init, ...) declare policies natively
     instead of patching raw MachineConfig dicts.
+
+    `app` may also name a registered scenario (repro.workloads.scenarios);
+    `fused=True` then synthesizes its trace INSIDE the engine scan — no
+    make_chunks_np staging at all — while `fused=False` materializes the
+    same generator stream host-side (the staged differential oracle). A
+    fused cell whose app is not a registered scenario fails loudly in
+    plan_groups; there is no silent fallback to staged mode.
     """
 
     app: str
@@ -84,6 +91,7 @@ class SweepCell:
     accesses: int | None = None
     counter_backend: str = "jax"
     control: ControlPolicy | None = None
+    fused: bool = False
     tags: Tags = ()
 
     @property
@@ -103,7 +111,7 @@ class SweepCell:
         """
         blob = repr((self.app, self.policy, self.seed, self.mc,
                      self.intervals, self.accesses, self.counter_backend,
-                     self.control, self.tags))
+                     self.control, self.fused, self.tags))
         return f"{self.label}#{hashlib.sha1(blob.encode()).hexdigest()[:10]}"
 
 
@@ -115,8 +123,8 @@ class SweepPlan:
 
     @staticmethod
     def grid(
-        apps,
-        policies,
+        apps=(),
+        policies=(),
         seeds=(7,),
         *,
         mc: MachineConfig | None = None,
@@ -124,6 +132,7 @@ class SweepPlan:
         accesses: int | None = None,
         counter_backend: str = "jax",
         policy: ControlPolicy | str | None = None,
+        scenario=None,
         tags: Tags = (),
     ) -> "SweepPlan":
         """The dense (apps x policies x seeds) grid at one machine config.
@@ -136,8 +145,29 @@ class SweepPlan:
         grids mixing several stateful kinds reject an override; declare one
         grid per kind and `+` them. The override's counter_backend is
         authoritative over the `counter_backend` argument.
+
+        `scenario` (a name or sequence of names from
+        repro.workloads.scenarios) adds FUSED cells: their traces are
+        synthesized inside the engine scan, so the runner never stages
+        make_chunks_np arrays for them. Scenario names passed through `apps`
+        instead run STAGED (host-materialized from the same generator stream
+        — the differential oracle); unregistered scenario names are rejected
+        here, loudly.
         """
         mc = mc or MachineConfig()
+        apps, policies, seeds = tuple(apps), tuple(policies), tuple(seeds)
+        if isinstance(scenario, str):
+            scenario = (scenario,)
+        scenario = tuple(scenario or ())
+        if scenario:
+            from repro.workloads import scenarios as scen
+
+            unknown = [s for s in scenario if not scen.is_scenario(s)]
+            if unknown:
+                raise ValueError(
+                    f"SweepPlan.grid: unregistered scenario(s) {unknown}; "
+                    f"registered: {scen.available_scenarios()}"
+                )
         control = None
         if policy is not None:
             stateful = {p for p in policies if p in SIM_POLICY_PRESETS}
@@ -157,10 +187,19 @@ class SweepPlan:
                     f"{control.counter_backend!r} on the policy override) — "
                     "set it on the ControlPolicy"
                 )
+        workloads = [(a, False) for a in apps] + [(n, True) for n in scenario]
+        if bool(workloads) != bool(policies) or (workloads and not seeds):
+            raise ValueError(
+                "SweepPlan.grid: a lopsided grid (workloads without "
+                f"policies/seeds, or vice versa: apps={apps!r}, "
+                f"scenario={scenario!r}, policies={policies!r}, "
+                f"seeds={seeds!r}) would silently declare ZERO cells — "
+                "pass every axis, or none for an explicitly empty plan"
+            )
         return SweepPlan(tuple(
             SweepCell(a, p, s, mc, intervals, accesses, counter_backend,
-                      control, tuple(tags))
-            for a in apps for p in policies for s in seeds
+                      control, fused, tuple(tags))
+            for a, fused in workloads for p in policies for s in seeds
         ))
 
     def __add__(self, other: "SweepPlan") -> "SweepPlan":
@@ -198,6 +237,18 @@ def plan_groups(plan: SweepPlan) -> list[FleetGroup]:
         if cell in seen:  # exact duplicates collapse to one run
             continue
         seen.add(cell)
+        if cell.fused:
+            # fused cells compile against the registered generator program;
+            # an unregistered name must fail HERE, not fall back to staging
+            from repro.workloads import scenarios as scen
+
+            if not scen.is_scenario(cell.app):
+                raise ValueError(
+                    f"plan_groups: cell {cell.label!r} requests fused "
+                    f"generation but {cell.app!r} is not a registered "
+                    f"scenario (registered: {scen.available_scenarios()}); "
+                    "fused cells never silently fall back to staged mode"
+                )
         meta = trace_mod.probe_meta(cell.app, cell.accesses)
         spec = simloop.EngineSpec(
             policy=cell.policy,
@@ -206,6 +257,10 @@ def plan_groups(plan: SweepPlan) -> list[FleetGroup]:
             footprint_pages=meta["footprint_pages"],
             counter_backend=cell.counter_backend,
             control=cell.control,
+            source=(
+                simloop.TraceSource(cell.app, cell.accesses)
+                if cell.fused else None
+            ),
         )
         key = (spec, cell.intervals, meta["accesses_per_interval"],
                meta["inst_per_access"])
@@ -216,6 +271,24 @@ def plan_groups(plan: SweepPlan) -> list[FleetGroup]:
                    meta=metas[key])
         for key, cells in buckets.items()
     ]
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_fused_fn(spec: simloop.EngineSpec, intervals: int, mesh):
+    """shard_map of the fused-generation engine body over the fleet mesh.
+
+    Per-shard it is exactly engine_run_fused_batch's program
+    (simloop.batch_run_fused): traces are synthesized inside each shard's
+    scan, so the only staged inputs are the (tiny) seed vector and initial
+    fleet states — nothing for the double buffer to generate host-side.
+    """
+    fn = shard_map(
+        simloop.batch_run_fused(spec, intervals),
+        mesh=mesh,
+        in_specs=(P("fleet"), P("fleet")),
+        out_specs=(P("fleet"), P("fleet")),
+    )
+    return jax.jit(fn, donate_argnums=(0,))
 
 
 @functools.lru_cache(maxsize=None)
@@ -399,21 +472,31 @@ class FleetRunner:
 
         Runs concurrently with the previous group's device scan (the scan was
         dispatched asynchronously) — this host/device overlap is the whole
-        point of the double buffer.
+        point of the double buffer. Fused-generation groups
+        (spec.source != None) stage only (states, seeds): their traces are
+        synthesized inside the sharded scan itself.
         """
         mesh = self.mesh
-        chunk_list, metas = [], []
-        for cell in group.cells:
-            chunks, meta = simloop.make_chunks_np(
-                cell.app, cell.policy, cell.mc, cell.seed,
-                cell.intervals, cell.accesses,
+        if group.spec.source is not None:
+            simloop.require_uniform_meta(
+                [trace_mod.probe_meta(c.app, c.accesses) for c in group.cells]
+                + [group.meta],
+                [c.label for c in group.cells] + ["probe"],
             )
-            chunk_list.append(chunks)
-            metas.append(meta)
-        simloop.require_uniform_meta(
-            metas + [group.meta], [c.label for c in group.cells] + ["probe"]
-        )
-        batch = jax.tree.map(lambda *xs: np.stack(xs), *chunk_list)
+            batch = np.asarray([c.seed for c in group.cells], np.int32)
+        else:
+            chunk_list, metas = [], []
+            for cell in group.cells:
+                chunks, meta = simloop.make_chunks_np(
+                    cell.app, cell.policy, cell.mc, cell.seed,
+                    cell.intervals, cell.accesses,
+                )
+                chunk_list.append(chunks)
+                metas.append(meta)
+            simloop.require_uniform_meta(
+                metas + [group.meta], [c.label for c in group.cells] + ["probe"]
+            )
+            batch = jax.tree.map(lambda *xs: np.stack(xs), *chunk_list)
         pad = -len(group.cells) % mesh.devices.size
         batch = _pad_fleet(batch, pad)
 
@@ -436,6 +519,15 @@ class FleetRunner:
                 target, shardings,
             )
         return jax.device_put(target, shardings)
+
+    def _launch(self, group: FleetGroup):
+        """Stage one group and dispatch its sharded scan (async) to the mesh."""
+        states, batch = self._stage(group)
+        if group.spec.source is not None:
+            fn = _sharded_fused_fn(group.spec, group.intervals, self.mesh)
+        else:
+            fn = _sharded_fleet_fn(group.spec, self.mesh)
+        return fn(states, batch)  # async dispatch: returns before the mesh finishes
 
     # -- retire -------------------------------------------------------------
 
@@ -483,10 +575,7 @@ class FleetRunner:
         metrics: dict[SweepCell, SimMetrics] = {}
         in_flight: collections.deque = collections.deque()
         for group in groups:
-            states, chunks = self._stage(group)
-            finals, stats = _sharded_fleet_fn(group.spec, self.mesh)(
-                states, chunks
-            )  # async dispatch: returns before the mesh finishes
+            finals, stats = self._launch(group)
             in_flight.append((group, finals.sim.counters, stats))
             while len(in_flight) >= (2 if self.double_buffer else 1):
                 self._retire(*in_flight.popleft(), metrics)
@@ -537,10 +626,7 @@ class FleetRunner:
             return out.items()
 
         for group in pending:
-            states, chunks = self._stage(group)
-            finals, stats = _sharded_fleet_fn(group.spec, self.mesh)(
-                states, chunks
-            )
+            finals, stats = self._launch(group)
             in_flight.append((group, finals.sim.counters, stats))
             while len(in_flight) >= (2 if self.double_buffer else 1):
                 yield from retire_next()

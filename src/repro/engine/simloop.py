@@ -57,12 +57,32 @@ POLICY_KINDS = {
 
 
 @dataclasses.dataclass(frozen=True)
+class TraceSource:
+    """A device-resident trace program as an engine input (hashable).
+
+    Carries the registered scenario NAME (repro.workloads.scenarios) plus the
+    per-interval access-count override — everything the fused scan needs to
+    synthesize each interval's chunk on device. Registration is import-time
+    (the registry rejects rebinding) so a name can never alias two programs
+    across the jit cache.
+    """
+
+    scenario: str
+    accesses: int | None = None
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineSpec:
     """Static configuration of one engine compile (hashable; jit static arg).
 
     `control` overrides the machine-derived ControlPolicy of the stateful
     policies (rainbow / HSCC ports) — the hook SweepPlan cells and the serving
     autotuner use to sweep controller knobs without touching MachineConfig.
+
+    `source` switches the engine to FUSED trace generation: instead of
+    consuming pre-staged TraceChunks, the scan body synthesizes each
+    interval's chunk from the named scenario program (engine_run_fused /
+    batch_run_fused take a seed where the staged entry points take chunks).
     """
 
     policy: str
@@ -72,6 +92,7 @@ class EngineSpec:
     counter_backend: str = "jax"  # rainbow counting: "jax"|"ref"|"pallas"|"interpret"
     max_invalidate: int = 256  # 4KB-TLB shootdowns applied per interval (eager cap)
     control: ControlPolicy | None = None
+    source: TraceSource | None = None
 
     def control_policy(self) -> ControlPolicy:
         """The effective ControlPolicy of this compile (stateful policies)."""
@@ -127,6 +148,17 @@ def _zero_stats() -> IntervalStats:
 # Host-side trace pre-generation (outside the loop; the scan never leaves HBM)
 # ---------------------------------------------------------------------------
 
+# flat-static residency hash: (vpn * KNUTH) % MOD < MOD * dram_ratio.  The
+# staged path evaluates it on int64 vpns; the fused in-scan path reduces
+# KNUTH mod MOD first so the whole product fits int32 — mathematically the
+# same residue, so both paths agree bit for bit.
+_FLAT_HASH_KNUTH = 2654435761
+_FLAT_HASH_MOD = 997
+
+
+def _flat_static_threshold(mc: MachineConfig) -> int:
+    return int(_FLAT_HASH_MOD * (mc.dram_bytes / (mc.dram_bytes + mc.nvm_bytes)))
+
 
 def make_chunks_np(
     app: str,
@@ -152,8 +184,9 @@ def make_chunks_np(
     vpn64 = np.stack([t.vpn for t in traces])
     wr = np.stack([t.is_write for t in traces])
     if policy == "flat-static":
-        ratio = mc.dram_bytes / (mc.dram_bytes + mc.nvm_bytes)
-        in_dram = ((vpn64 * 2654435761) % 997) < int(997 * ratio)
+        in_dram = (
+            (vpn64 * _FLAT_HASH_KNUTH) % _FLAT_HASH_MOD
+        ) < _flat_static_threshold(mc)
     elif policy == "dram-only":
         in_dram = np.ones_like(wr)
     else:
@@ -480,6 +513,120 @@ def engine_run_batch(
 ) -> tuple[EngineState, IntervalStats]:
     """vmap of engine_run over a leading batch dim (fleet sweeps over seeds)."""
     return batch_run(spec)(states, chunks)
+
+
+# ---------------------------------------------------------------------------
+# Fused in-scan trace generation (EngineSpec.source)
+# ---------------------------------------------------------------------------
+
+
+def _fused_program(spec: EngineSpec):
+    """(setup, emit) of the spec's scenario, shape-checked against the spec.
+
+    Raises loudly when the spec is staged or the scenario's static shapes
+    disagree with the compile signature — a fused cell must never silently
+    fall back to (or group with) a different shape than it emits.
+    """
+    from repro.workloads import scenarios  # lazy: workloads -> sim.config
+
+    if spec.source is None:
+        raise ValueError(
+            "EngineSpec.source is None: this is a staged compile — feed it "
+            "TraceChunks via engine_run/engine_run_batch, or set source="
+            "TraceSource(scenario, accesses) for fused in-scan generation"
+        )
+    setup, emit, meta = scenarios.trace_program(
+        spec.source.scenario, spec.source.accesses
+    )
+    if (meta["num_superpages"] != spec.num_superpages
+            or meta["footprint_pages"] != spec.footprint_pages):
+        raise ValueError(
+            f"EngineSpec/{spec.source.scenario!r} shape mismatch: spec has "
+            f"(num_superpages={spec.num_superpages}, footprint_pages="
+            f"{spec.footprint_pages}) but the scenario program emits "
+            f"(num_superpages={meta['num_superpages']}, footprint_pages="
+            f"{meta['footprint_pages']})"
+        )
+    return setup, emit
+
+
+def synth_chunk(spec: EngineSpec, emit, aux, seed, interval) -> TraceChunks:
+    """One interval's TraceChunks synthesized on device (inside the scan).
+
+    Field-for-field what make_chunks_np stages for the same workload: vpn is
+    the emitted page index, sp/page its superpage split, and `in_dram`
+    carries the state-free residency of flat-static / dram-only.
+    """
+    vpn, is_write = emit(aux, seed, interval)
+    if spec.policy == "flat-static":
+        in_dram = (
+            (vpn % _FLAT_HASH_MOD) * (_FLAT_HASH_KNUTH % _FLAT_HASH_MOD)
+            % _FLAT_HASH_MOD
+        ) < _flat_static_threshold(spec.mc)
+    elif spec.policy == "dram-only":
+        in_dram = jnp.ones_like(is_write)
+    else:
+        in_dram = jnp.zeros_like(is_write)
+    return TraceChunks(
+        sp=vpn // PAGES_PER_SP,
+        page=vpn % PAGES_PER_SP,
+        vpn=vpn,
+        is_write=is_write,
+        in_dram=in_dram,
+    )
+
+
+def _fused_scan(
+    spec: EngineSpec, state: EngineState, seed, intervals: int
+) -> tuple[EngineState, IntervalStats]:
+    """The whole simulation as one lax.scan, chunks synthesized in the body.
+
+    The scenario's seed-dependent setup (e.g. hot-page placement) runs ONCE,
+    outside the scan; each scan step folds the interval index into the seed's
+    key stream and emits that interval's chunk right where engine_step
+    consumes it — zero staging, zero host<->device trace traffic.
+    """
+    setup, emit = _fused_program(spec)
+    seed = jnp.asarray(seed, jnp.int32)
+    aux = setup(seed)
+
+    def body(st, i):
+        return engine_step(spec, st, synth_chunk(spec, emit, aux, seed, i))
+
+    return jax.lax.scan(body, state, jnp.arange(intervals, dtype=jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "intervals"))
+def engine_run_fused(
+    spec: EngineSpec, state: EngineState, seed, intervals: int
+) -> tuple[EngineState, IntervalStats]:
+    """Fused counterpart of engine_run: a seed in, a full simulation out."""
+    return _fused_scan(spec, state, seed, intervals)
+
+
+def batch_run_fused(spec: EngineSpec, intervals: int):
+    """Unjitted fused whole-sim runner vmapped over a leading fleet axis.
+
+    The single body shared by `engine_run_fused_batch` (one-device vmap) and
+    `engine.fleet`'s fused shard_map partitions — same program per shard,
+    bit for bit, as the single-device fused path.
+    """
+    _fused_program(spec)  # staged/mismatched specs fail HERE, not at trace
+
+    def run(states: EngineState, seeds):
+        return jax.vmap(
+            lambda st, sd: _fused_scan(spec, st, sd, intervals)
+        )(states, seeds)
+
+    return run
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "intervals"))
+def engine_run_fused_batch(
+    spec: EngineSpec, states: EngineState, seeds, intervals: int
+) -> tuple[EngineState, IntervalStats]:
+    """vmap of engine_run_fused over a seed fleet (one batched compile)."""
+    return batch_run_fused(spec, intervals)(states, seeds)
 
 
 def sweep_seeds(

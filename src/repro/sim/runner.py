@@ -166,22 +166,56 @@ def simulate(
     seed: int = 7,
     engine: bool = True,
     counter_backend: str = "jax",
+    fused: bool = False,
 ) -> SimMetrics:
-    """Simulate (app x policy) over N intervals and aggregate SimMetrics."""
+    """Simulate (app x policy) over N intervals and aggregate SimMetrics.
+
+    `app` may be a numpy app profile, a mix, or a registered scenario
+    (repro.workloads). `fused=True` (scenarios only) synthesizes each
+    interval's chunk INSIDE the engine scan instead of staging host-generated
+    arrays — bit-identical to the staged path by the workloads differential
+    gate (tests/test_workloads.py).
+    """
     if not engine:
+        if fused:
+            raise ValueError("fused generation requires the engine path")
         return simulate_eager(app, policy, mc, intervals, accesses, seed)
     from repro.engine import simloop  # lazy: sim.__init__ imports this module
 
     mc = mc or MachineConfig()
-    chunks, meta = simloop.make_chunks(app, policy, mc, seed, intervals, accesses)
+    if fused:
+        from repro.workloads import scenarios as scen
+
+        if not scen.is_scenario(app):
+            raise ValueError(
+                f"fused generation needs a registered scenario, got {app!r} "
+                f"(registered: {scen.available_scenarios()}); numpy app "
+                "profiles/mixes run staged"
+            )
+        meta = trace_mod.probe_meta(app, accesses)
+        source = simloop.TraceSource(scenario=app, accesses=accesses)
+        chunks = None
+    else:
+        chunks, meta = simloop.make_chunks(
+            app, policy, mc, seed, intervals, accesses
+        )
+        source = None
     spec = simloop.EngineSpec(
         policy=policy,
         mc=mc,
         num_superpages=meta["num_superpages"],
         footprint_pages=meta["footprint_pages"],
         counter_backend=counter_backend,
+        source=source,
     )
-    state, stats = simloop.engine_run(spec, simloop.engine_init(spec), chunks)
+    if fused:
+        state, stats = simloop.engine_run_fused(
+            spec, simloop.engine_init(spec), seed, intervals
+        )
+    else:
+        state, stats = simloop.engine_run(
+            spec, simloop.engine_init(spec), chunks
+        )
     totals = totals_from_stats(policy, mc, stats, meta["accesses_per_interval"])
     return finalize_metrics(
         app, policy, mc, totals, state.sim.counters,
@@ -240,12 +274,18 @@ def sweep(
     counter_backend: str = "jax",
     stream: bool = False,
     journal=None,
+    scenarios: list[str] = (),
 ) -> dict[tuple[str, str, int], SimMetrics]:
     """Fleet sweep: the (app x policy x seed) grid as ONE FleetRunner plan.
 
     Cells sharing a compile signature are fused onto the fleet axis, sharded
     across the device mesh, and double-buffered against host trace staging
     (engine.fleet). Returns {(app, policy, seed): metrics}.
+
+    `scenarios` adds registered workload scenarios (repro.workloads) as
+    FUSED cells: their traces are synthesized inside the sharded engine scan,
+    so the runner stages nothing host-side for them (apps named in `apps`,
+    scenario names included, run staged).
 
     `stream=True` retires groups through the incremental FleetRunner.run_iter
     path and `journal` (a path) checkpoints retired groups so a killed sweep
@@ -256,7 +296,7 @@ def sweep(
     plan = fleet.SweepPlan.grid(
         apps, policies, tuple(seeds), mc=mc or MachineConfig(),
         intervals=intervals, accesses=accesses,
-        counter_backend=counter_backend,
+        counter_backend=counter_backend, scenario=tuple(scenarios),
     )
     result = fleet.FleetRunner().run(plan, stream=stream, journal=journal)
     return {(c.app, c.policy, c.seed): m for c, m in result.items()}

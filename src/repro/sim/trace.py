@@ -178,10 +178,36 @@ def generate_mix(
 
 
 def generate(name: str, seed: int, interval: int, accesses: int | None = None) -> Trace:
+    """One interval of any workload: numpy app profile, mix, or scenario.
+
+    Registered scenario names (repro.workloads.scenarios) dispatch to a thin
+    host materialization of the SAME jitted generator stream the engine fuses
+    into its interval scan — so feeding this Trace through the staged engine
+    path is the exact differential oracle of fused in-scan generation.
+    """
     if name in MIXES:
         per_app = (accesses // len(MIXES[name])) if accesses else None
         return generate_mix(name, seed, interval, per_app)
-    return generate_interval(APPS[name], seed, interval, accesses)
+    if name in APPS:
+        return generate_interval(APPS[name], seed, interval, accesses)
+    return _materialize_scenario(name, seed, interval, accesses)
+
+
+def _materialize_scenario(
+    name: str, seed: int, interval: int, accesses: int | None
+) -> Trace:
+    """Host Trace from a registered scenario's device generator stream."""
+    from repro.workloads import scenarios  # lazy: keeps trace.py numpy-first
+
+    pages, is_write, meta = scenarios.materialize(name, seed, interval, accesses)
+    return Trace(
+        sp=(pages // PAGES_PER_SP).astype(np.int32),
+        page=(pages % PAGES_PER_SP).astype(np.int32),
+        is_write=is_write,
+        num_superpages=int(meta["num_superpages"]),
+        footprint_pages=int(meta["footprint_pages"]),
+        inst_per_access=float(meta["inst_per_access"]),
+    )
 
 
 def probe_meta(name: str, accesses: int | None = None) -> dict:
@@ -190,7 +216,16 @@ def probe_meta(name: str, accesses: int | None = None) -> dict:
     Seed/interval-invariant by construction (footprints and access counts are
     profile-derived), so fleet schedulers can group compatible cells before any
     trace generation happens. Keys match engine.simloop.make_chunks meta.
+
+    Scenario names report the registered generator program's static shapes —
+    identical whether the cell later runs staged or fused, so both modes of
+    one scenario land in consistent compile-signature groups (never a silent
+    shape mismatch between probe and emission: materialize() re-asserts it).
     """
+    if name not in APPS and name not in MIXES:
+        from repro.workloads import scenarios  # lazy: keeps trace.py numpy-first
+
+        return scenarios.probe_meta(name, accesses)
 
     def one(prof: AppProfile, a: int | None) -> tuple[int, int, int, float]:
         fp = _mb_to_pages(prof.footprint_mb)

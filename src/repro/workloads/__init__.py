@@ -1,0 +1,33 @@
+"""repro.workloads: scenario-programmable, device-resident trace generation.
+
+`generators` holds the pure-JAX trace programs (zipf-hotspot, phase-shift,
+sequential-scan, pointer-chase, interleaved-mix); `scenarios` names them in a
+registry whose entries are first-class workload names across the repo —
+`sim.trace.generate`/`probe_meta` dispatch on them, `engine.simloop` fuses
+them into the interval scan (EngineSpec.source), and `engine.fleet` sweeps
+them without any host trace staging. See docs/workloads.md.
+"""
+from repro.workloads.generators import (
+    InterleavedMix,
+    PhaseShift,
+    PointerChase,
+    SequentialScan,
+    ZipfHotspot,
+)
+from repro.workloads.scenarios import (
+    Scenario,
+    available_scenarios,
+    get_scenario,
+    is_scenario,
+    materialize,
+    probe_meta,
+    register_scenario,
+    trace_program,
+)
+
+__all__ = [
+    "InterleavedMix", "PhaseShift", "PointerChase", "SequentialScan",
+    "ZipfHotspot", "Scenario", "available_scenarios", "get_scenario",
+    "is_scenario", "materialize", "probe_meta", "register_scenario",
+    "trace_program",
+]

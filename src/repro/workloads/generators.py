@@ -1,0 +1,376 @@
+"""Pure-JAX trace *programs*: deterministic per-interval access generators.
+
+Each generator is a frozen, hashable program description with two phases:
+
+  setup(seed)          seed-dependent, interval-invariant choices (e.g. the
+                       hot-page placement) — computed ONCE per simulation,
+                       outside the interval scan;
+  emit(aux, key, i)    one monitoring interval's accesses as (page_idx,
+                       is_write) arrays of static shape [accesses], keyed by
+                       ``fold_in(PRNGKey(seed), interval)``.
+
+Because emit runs *inside* the engine's ``lax.scan`` (engine.simloop fused
+mode) AND standalone on the host (the staged differential oracle,
+sim.trace.generate), its device graph is restricted to operations whose
+results cannot depend on the surrounding compile context:
+
+  * threefry bits / fold_in / uniform / randint  (elementwise, deterministic)
+  * searchsorted against HOST-precomputed f32 CDF tables (zipf weights are
+    built with numpy and closed over as constants — no on-device cumsum/pow
+    whose fusion could move a sample across a bucket boundary)
+  * integer arithmetic (uint32 LCG closed form: cumprod/cumsum are exact mod
+    2^32 under any association; coprime-stride affine index permutations for
+    interleaving — emit contains NO device sort: hot/cold traffic is mixed
+    per-lane by an elementwise bernoulli, so in-scan generation stays O(A))
+
+so a chunk generated in-scan is bit-identical to the same chunk materialized
+to host and fed back through the staged path — the property the differential
+gate in tests/test_workloads.py pins. (setup may sort: it runs once per
+simulation, outside the scan.)
+
+Generators compose: `InterleavedMix` interleaves member programs in a shared
+(superpage-aligned) address space, mirroring sim.trace.generate_mix.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PAGES_PER_SP = 512  # == sim.config.PAGES_PER_SP (kept literal: no sim import)
+
+# fold_in salts: one stream per random decision, never reused across purposes
+_SALT_SETUP = 101
+_SALT_HOT = 7
+_SALT_COLD = 11
+_SALT_SHUFFLE = 13
+_SALT_WRITE = 17
+_SALT_CHASE = 19
+
+# Numerical Recipes LCG (mod 2^32): the pointer-chase hash chain
+_LCG_A = np.uint32(1664525)
+_LCG_C = np.uint32(1013904223)
+
+
+def interval_key(seed: jax.Array, interval: jax.Array) -> jax.Array:
+    """The per-interval key stream: fold_in(PRNGKey(seed), interval)."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), interval)
+
+
+def _zipf_cdf(n: int, alpha: float) -> jnp.ndarray:
+    """Host-built zipf CDF over ranks 1..n (f32 constant; cdf[-1] == 1.0)."""
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    w = ranks ** (-alpha)
+    cdf = np.cumsum(w / w.sum()).astype(np.float32)
+    cdf[-1] = np.float32(1.0)
+    return jnp.asarray(cdf)
+
+
+def _zipf_pick(key: jax.Array, cdf: jnp.ndarray, size: int) -> jax.Array:
+    """size zipf-ranked indices in [0, len(cdf)) via inverse CDF."""
+    u = jax.random.uniform(key, (size,), jnp.float32)
+    return jnp.clip(
+        jnp.searchsorted(cdf, u, side="right"), 0, cdf.shape[0] - 1
+    ).astype(jnp.int32)
+
+
+def _hot_cold_mix(key: jax.Array, hot: jax.Array, cold: jax.Array,
+                  hot_traffic: float) -> jax.Array:
+    """Route each lane to its hot or cold candidate by an elementwise
+    bernoulli(hot_traffic) — the sort-free interleave (binomial hot share)."""
+    u = jax.random.uniform(key, hot.shape, jnp.float32)
+    return jnp.where(u < hot_traffic, hot, cold)
+
+
+#: Small primes for affine index permutations j -> (a*j + b) mod n. `a` must
+#: be coprime with n (then the map IS a permutation) and small enough that
+#: a*(n-1) fits int32 — so the interleave is pure int32 arithmetic, no sort.
+_STRIDE_PRIMES = (4093, 2039, 1021, 509, 251, 127, 61, 31, 13, 7, 3, 1)
+
+
+def _affine_interleave(key: jax.Array, n: int) -> jax.Array:
+    """A cheap pseudorandom permutation of arange(n): coprime stride + random
+    offset. Statically picks the largest listed prime coprime with n whose
+    products stay in int32; the offset is the only per-interval randomness."""
+    a = next(p for p in _STRIDE_PRIMES
+             if math.gcd(p, n) == 1 and p * (n - 1) < 2**31)
+    b = jax.random.randint(key, (), 0, n, jnp.int32)
+    return (jnp.arange(n, dtype=jnp.int32) * a + b) % n
+
+
+def _writes(key: jax.Array, size: int, ratio: float) -> jax.Array:
+    return jax.random.uniform(key, (size,), jnp.float32) < ratio
+
+
+def _require(cond: bool, what: str) -> None:
+    if not cond:
+        raise ValueError(f"workload generator: {what}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ZipfHotspot:
+    """Stable hot set + zipf-skewed traffic (the CHOP/Table-I access shape).
+
+    A seed-fixed random subset of ``hot_frac * footprint`` pages receives
+    ``hot_traffic`` of all references, zipf(alpha)-skewed by a stable rank
+    order; the rest is uniform background over the footprint.
+    """
+
+    footprint_pages: int
+    accesses: int
+    hot_frac: float = 0.05
+    zipf_alpha: float = 1.1
+    hot_traffic: float = 0.70
+    write_ratio: float = 0.25
+
+    def validate(self) -> None:
+        _require(self.footprint_pages >= 1, "footprint_pages must be >= 1")
+        _require(self.accesses >= 1, "accesses must be >= 1")
+        _require(0.0 < self.hot_frac <= 1.0, "hot_frac must be in (0, 1]")
+        _require(self.zipf_alpha > 0.0, "zipf_alpha must be > 0")
+        _require(0.0 <= self.hot_traffic <= 1.0, "hot_traffic in [0, 1]")
+        _require(0.0 <= self.write_ratio <= 1.0, "write_ratio in [0, 1]")
+
+    @property
+    def _n_hot(self) -> int:
+        # round, not truncate: scenario presets derive hot_frac from an
+        # integer page count (n_hot / fp), and int() would lose a page to
+        # binary64 rounding for some profiles
+        return max(1, round(self.footprint_pages * self.hot_frac))
+
+    def setup(self, seed: jax.Array):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), _SALT_SETUP)
+        perm = jax.random.permutation(key, self.footprint_pages)
+        return perm[: self._n_hot].astype(jnp.int32)
+
+    def emit(self, aux, key: jax.Array, interval: jax.Array):
+        del interval  # the hot set is stationary; only the key stream moves
+        a = self.accesses
+        cdf = _zipf_cdf(self._n_hot, self.zipf_alpha)
+        hot = aux[_zipf_pick(jax.random.fold_in(key, _SALT_HOT), cdf, a)]
+        cold = jax.random.randint(
+            jax.random.fold_in(key, _SALT_COLD), (a,), 0,
+            self.footprint_pages, jnp.int32,
+        )
+        pages = _hot_cold_mix(
+            jax.random.fold_in(key, _SALT_SHUFFLE), hot, cold,
+            self.hot_traffic,
+        )
+        wr = _writes(
+            jax.random.fold_in(key, _SALT_WRITE), a, self.write_ratio
+        )
+        return pages, wr
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseShift:
+    """Working-set drift: a zipf-hot window that slides every interval.
+
+    The working window covers ``ws_frac`` of the footprint and advances by
+    ``drift_frac`` of its own width per interval (wrapping) — the phase-change
+    stressor history-based policies must chase (Memos' pattern inversion).
+    """
+
+    footprint_pages: int
+    accesses: int
+    ws_frac: float = 0.25
+    drift_frac: float = 0.10
+    hot_frac: float = 0.20
+    zipf_alpha: float = 1.1
+    hot_traffic: float = 0.70
+    write_ratio: float = 0.25
+
+    def validate(self) -> None:
+        _require(self.footprint_pages >= 1, "footprint_pages must be >= 1")
+        _require(self.accesses >= 1, "accesses must be >= 1")
+        _require(0.0 < self.ws_frac <= 1.0, "ws_frac must be in (0, 1]")
+        _require(0.0 <= self.drift_frac <= 1.0, "drift_frac in [0, 1]")
+        _require(0.0 < self.hot_frac <= 1.0, "hot_frac must be in (0, 1]")
+        _require(self.zipf_alpha > 0.0, "zipf_alpha must be > 0")
+        _require(0.0 <= self.hot_traffic <= 1.0, "hot_traffic in [0, 1]")
+        _require(0.0 <= self.write_ratio <= 1.0, "write_ratio in [0, 1]")
+
+    @property
+    def _ws(self) -> int:
+        return max(1, round(self.footprint_pages * self.ws_frac))
+
+    @property
+    def _n_hot(self) -> int:
+        return max(1, round(self._ws * self.hot_frac))
+
+    def setup(self, seed: jax.Array):
+        # hot placement is fixed RELATIVE to the window, so the drift moves
+        # the whole phase coherently (hot set included)
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), _SALT_SETUP)
+        perm = jax.random.permutation(key, self._ws)
+        return perm[: self._n_hot].astype(jnp.int32)
+
+    def emit(self, aux, key: jax.Array, interval: jax.Array):
+        a = self.accesses
+        drift = max(1, int(self._ws * self.drift_frac))
+        offset = (interval.astype(jnp.int32) * drift) % self.footprint_pages
+        cdf = _zipf_cdf(self._n_hot, self.zipf_alpha)
+        hot_rel = aux[_zipf_pick(jax.random.fold_in(key, _SALT_HOT), cdf, a)]
+        cold_rel = jax.random.randint(
+            jax.random.fold_in(key, _SALT_COLD), (a,), 0, self._ws, jnp.int32
+        )
+        rel = _hot_cold_mix(
+            jax.random.fold_in(key, _SALT_SHUFFLE), hot_rel, cold_rel,
+            self.hot_traffic,
+        )
+        pages = (offset + rel) % self.footprint_pages
+        wr = _writes(
+            jax.random.fold_in(key, _SALT_WRITE), a, self.write_ratio
+        )
+        return pages.astype(jnp.int32), wr
+
+
+@dataclasses.dataclass(frozen=True)
+class SequentialScan:
+    """Streaming scan: strided sequential sweep that resumes across intervals.
+
+    Interval i continues where i-1 stopped (position ``i * accesses * stride``
+    mod footprint) — zero reuse inside the TLB reach, the worst case for
+    hot-set monitors and the best case for superpage translations.
+    """
+
+    footprint_pages: int
+    accesses: int
+    stride: int = 1
+    write_ratio: float = 0.0
+
+    def validate(self) -> None:
+        _require(self.footprint_pages >= 1, "footprint_pages must be >= 1")
+        _require(self.accesses >= 1, "accesses must be >= 1")
+        _require(self.stride >= 1, "stride must be >= 1")
+        _require(0.0 <= self.write_ratio <= 1.0, "write_ratio in [0, 1]")
+
+    def setup(self, seed: jax.Array):
+        del seed
+        return ()
+
+    def emit(self, aux, key: jax.Array, interval: jax.Array):
+        del aux
+        start = (
+            interval.astype(jnp.int32) * (self.accesses * self.stride)
+        ) % self.footprint_pages
+        pages = (
+            start + jnp.arange(self.accesses, dtype=jnp.int32) * self.stride
+        ) % self.footprint_pages
+        wr = _writes(
+            jax.random.fold_in(key, _SALT_WRITE), self.accesses,
+            self.write_ratio,
+        )
+        return pages, wr
+
+
+@dataclasses.dataclass(frozen=True)
+class PointerChase:
+    """Dependent random walk: an LCG hash chain over the footprint.
+
+    Evaluated in closed form (x_k = a^k x_0 + c * sum_{j<k} a^j mod 2^32 via
+    uint32 cumprod/cumsum — exact under any association), so the chain is
+    vectorizable yet identical to stepping the LCG. A fresh chain start per
+    interval, derived from the interval key.
+    """
+
+    footprint_pages: int
+    accesses: int
+    write_ratio: float = 0.10
+
+    def validate(self) -> None:
+        _require(self.footprint_pages >= 1, "footprint_pages must be >= 1")
+        _require(self.accesses >= 1, "accesses must be >= 1")
+        _require(0.0 <= self.write_ratio <= 1.0, "write_ratio in [0, 1]")
+
+    def setup(self, seed: jax.Array):
+        del seed
+        return ()
+
+    def emit(self, aux, key: jax.Array, interval: jax.Array):
+        del aux, interval
+        a = self.accesses
+        x0 = jax.random.bits(
+            jax.random.fold_in(key, _SALT_CHASE), (), jnp.uint32
+        )
+        a_pow = jnp.cumprod(
+            jnp.concatenate([
+                jnp.ones((1,), jnp.uint32), jnp.full((a - 1,), _LCG_A)
+            ])
+        )  # a^0 .. a^{A-1}, exact mod 2^32
+        geo = jnp.concatenate([
+            jnp.zeros((1,), jnp.uint32), jnp.cumsum(a_pow)[: a - 1]
+        ])  # sum_{j<k} a^j
+        x = a_pow * x0 + _LCG_C * geo
+        # drop the weak low LCG bits before reducing into the footprint
+        pages = ((x >> np.uint32(7)) % np.uint32(self.footprint_pages))
+        wr = _writes(
+            jax.random.fold_in(key, _SALT_WRITE), a, self.write_ratio
+        )
+        return pages.astype(jnp.int32), wr
+
+
+@dataclasses.dataclass(frozen=True)
+class InterleavedMix:
+    """Member programs interleaved in a shared, superpage-aligned space.
+
+    Each member keeps its own footprint (offset to a superpage boundary, as
+    sim.trace.generate_mix offsets members by whole superpages) and its own
+    key stream (fold_in by member index); the union is interleaved per
+    interval by a coprime-stride affine permutation (sort-free) so the
+    engine sees one mixed multi-programmed stream.
+    """
+
+    members: tuple  # tuple of generator programs
+
+    def validate(self) -> None:
+        _require(len(self.members) >= 1, "mix needs at least one member")
+        for m in self.members:
+            m.validate()
+
+    @property
+    def _bases(self) -> tuple[int, ...]:
+        """Member page offsets (superpage-aligned cumulative footprints)."""
+        bases, base = [], 0
+        for m in self.members:
+            bases.append(base)
+            nsp = -(-m.footprint_pages // PAGES_PER_SP)
+            base += nsp * PAGES_PER_SP
+        return tuple(bases)
+
+    @property
+    def footprint_pages(self) -> int:
+        last = self.members[-1]
+        return self._bases[-1] + (
+            -(-last.footprint_pages // PAGES_PER_SP) * PAGES_PER_SP
+        )
+
+    @property
+    def accesses(self) -> int:
+        return sum(m.accesses for m in self.members)
+
+    def setup(self, seed: jax.Array):
+        return tuple(
+            m.setup(jax.random.fold_in(jax.random.PRNGKey(seed), i)[0])
+            for i, m in enumerate(self.members)
+        )
+
+    def emit(self, aux, key: jax.Array, interval: jax.Array):
+        pages_l, wr_l = [], []
+        for i, (m, a, base) in enumerate(zip(self.members, aux, self._bases)):
+            p, w = m.emit(a, jax.random.fold_in(key, i), interval)
+            pages_l.append(p + base)
+            wr_l.append(w)
+        pages = jnp.concatenate(pages_l)
+        wr = jnp.concatenate(wr_l)
+        perm = _affine_interleave(
+            jax.random.fold_in(key, _SALT_SHUFFLE), pages.shape[0]
+        )
+        return pages[perm], wr[perm]
+
+
+GENERATOR_KINDS = (ZipfHotspot, PhaseShift, SequentialScan, PointerChase,
+                   InterleavedMix)

@@ -1,0 +1,305 @@
+"""Scenario registry: named, engine-consumable trace programs.
+
+A `Scenario` binds one generator program (workloads.generators) to a name and
+the trace metadata the fleet scheduler groups compiles by — the same four
+keys `sim.trace.probe_meta` reports for the numpy app profiles, so scenario
+cells group in `engine.fleet.plan_groups` exactly like app cells do.
+
+Registered presets:
+
+  syn/<app>        the 14 paper app profiles (Tables I/II) re-expressed as
+                   ZipfHotspot programs: same footprint, access count,
+                   hot-page fraction, zipf skew, write ratio, and CHOP 70%
+                   hot-traffic rule — but generated on device, inside the
+                   engine scan (engine.simloop fused mode)
+  stress/*         scenario-space stressors the host generator never covered:
+                   working-set drift, streaming scans, pointer chases, and an
+                   interleaved mix of all three
+
+Consumers:
+
+  trace_program(name, accesses)   (setup, emit, meta) for the engine's fused
+                                  in-scan generation (engine.simloop)
+  materialize(name, seed, i)      one interval pulled to host numpy — the
+                                  staged path / differential oracle
+                                  (sim.trace.generate dispatches here)
+  probe_meta(name, accesses)      compile-signature metadata, no generation
+
+Registration is import-time only: `EngineSpec.source` carries just the
+scenario *name* into the jit cache, so re-binding a name after compiles exist
+would alias stale programs — the registry therefore rejects duplicates (and
+names that shadow a numpy app profile or mix).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from repro.sim.config import APPS, MIXES, AppProfile
+from repro.sim.trace import HOT_TRAFFIC_FRACTION, _mb_to_pages
+from repro.workloads.generators import (
+    PAGES_PER_SP,
+    InterleavedMix,
+    PhaseShift,
+    PointerChase,
+    SequentialScan,
+    ZipfHotspot,
+    interval_key,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A named trace program plus the metadata the engine compiles against."""
+
+    name: str
+    gen: object  # one of generators.GENERATOR_KINDS
+    inst_per_access: float = 12.0
+
+    def generator(self, accesses: int | None = None):
+        """The program, resized to `accesses` per interval if requested."""
+        if accesses is None:
+            return self.gen
+        return _with_accesses(self.gen, accesses)
+
+    def probe_meta(self, accesses: int | None = None) -> dict:
+        """Same keys as sim.trace.probe_meta — the compile signature."""
+        gen = self.generator(accesses)
+        fp = gen.footprint_pages
+        return {
+            "num_superpages": -(-fp // PAGES_PER_SP),
+            "footprint_pages": fp,
+            "inst_per_access": self.inst_per_access,
+            "accesses_per_interval": gen.accesses,
+        }
+
+
+def _with_accesses(gen, accesses: int):
+    """Resize a program's per-interval access count (mix: split per member,
+    exactly as sim.trace.generate splits `accesses` across MIXES members)."""
+    if isinstance(gen, InterleavedMix):
+        per = accesses // len(gen.members)
+        return dataclasses.replace(
+            gen, members=tuple(_with_accesses(m, per) for m in gen.members)
+        )
+    return dataclasses.replace(gen, accesses=accesses)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_SCENARIOS: dict[str, Scenario] = {}
+
+
+def register_scenario(obj):
+    """Register a Scenario (directly, or as a decorator on a 0-arg factory).
+
+    Names must be globally unique AND must not shadow a numpy app profile or
+    mix — scenario names are first-class workload names (`sim.trace.generate`
+    / `probe_meta` dispatch on them), so a collision would silently change
+    which generator a SweepCell means.
+    """
+    scenario = obj() if not isinstance(obj, Scenario) else obj
+    if not isinstance(scenario, Scenario):
+        raise TypeError(f"register_scenario: expected a Scenario factory, "
+                        f"got {scenario!r}")
+    if scenario.name in _SCENARIOS:
+        raise ValueError(f"scenario {scenario.name!r} is already registered")
+    if scenario.name in APPS or scenario.name in MIXES:
+        raise ValueError(
+            f"scenario {scenario.name!r} shadows a numpy app profile/mix"
+        )
+    scenario.gen.validate()
+    _SCENARIOS[scenario.name] = scenario
+    return obj
+
+
+def is_scenario(name: str) -> bool:
+    return name in _SCENARIOS
+
+
+def available_scenarios() -> tuple[str, ...]:
+    return tuple(sorted(_SCENARIOS))
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return _SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; registered: {available_scenarios()}"
+        ) from None
+
+
+def probe_meta(name: str, accesses: int | None = None) -> dict:
+    return get_scenario(name).probe_meta(accesses)
+
+
+# ---------------------------------------------------------------------------
+# Engine + host consumers
+# ---------------------------------------------------------------------------
+
+
+def trace_program(name: str, accesses: int | None = None):
+    """(setup, emit, meta) of one scenario, ready for the engine scan.
+
+    setup(seed)        -> aux pytree (interval-invariant, one evaluation per
+                          simulation, OUTSIDE the interval scan)
+    emit(aux, seed, i) -> (page_idx int32[A], is_write bool[A]) for interval
+                          i under fold_in(PRNGKey(seed), i)
+    """
+    scenario = get_scenario(name)
+    gen = scenario.generator(accesses)
+    gen.validate()
+    meta = scenario.probe_meta(accesses)
+
+    def setup(seed):
+        return gen.setup(seed)
+
+    def emit(aux, seed, interval):
+        import jax.numpy as jnp
+
+        interval = jnp.asarray(interval, jnp.int32)
+        key = interval_key(seed, interval)
+        pages, wr = gen.emit(aux, key, interval)
+        return pages.astype(jnp.int32), wr
+
+    return setup, emit, meta
+
+
+@functools.lru_cache(maxsize=None)
+def _materialize_fn(name: str, accesses: int | None):
+    import jax
+
+    setup, emit, meta = trace_program(name, accesses)
+
+    @jax.jit
+    def go(seed, interval):
+        return emit(setup(seed), seed, interval)
+
+    return go, meta
+
+
+def materialize(name: str, seed: int, interval: int,
+                accesses: int | None = None):
+    """One interval of a scenario pulled to host numpy (the staged oracle).
+
+    Runs the SAME jitted emit program the fused engine scan traces, so the
+    returned arrays are bit-identical to what the in-scan generator feeds
+    engine_step. Returns (page_idx, is_write, meta); the meta shapes are
+    asserted against probe_meta so a scenario can never silently group under
+    one compile signature and emit another.
+    """
+    import jax.numpy as jnp
+
+    go, meta = _materialize_fn(name, accesses)
+    pages, wr = go(jnp.int32(seed), jnp.int32(interval))
+    pages, wr = np.asarray(pages), np.asarray(wr)
+    if pages.shape != (meta["accesses_per_interval"],):
+        raise ValueError(
+            f"scenario {name!r} emitted {pages.shape} accesses but its "
+            f"probe_meta promises {meta['accesses_per_interval']} — compile "
+            "grouping would be corrupt"
+        )
+    return pages, wr, meta
+
+
+# ---------------------------------------------------------------------------
+# Presets
+# ---------------------------------------------------------------------------
+
+
+def _app_scenario(prof: AppProfile) -> Scenario:
+    """A paper app profile as an on-device ZipfHotspot program.
+
+    Footprint, per-interval access count, hot fraction, zipf skew, write
+    ratio, and the CHOP 70% hot-traffic rule come straight from Tables I/II;
+    the (host-loop-only) Table-II superpage clustering detail is traded for
+    in-scan generation — the staged numpy profiles remain the calibration
+    reference (docs/workloads.md).
+    """
+    fp = _mb_to_pages(prof.footprint_mb)
+    ws = min(_mb_to_pages(prof.working_set_mb), fp)
+    n_hot = max(1, int(ws * prof.hot_page_pct / 100.0))
+    return Scenario(
+        name=f"syn/{prof.name}",
+        gen=ZipfHotspot(
+            footprint_pages=fp,
+            accesses=prof.accesses_per_interval,
+            hot_frac=n_hot / fp,
+            zipf_alpha=prof.zipf_alpha,
+            hot_traffic=HOT_TRAFFIC_FRACTION,
+            write_ratio=prof.write_ratio,
+        ),
+        inst_per_access=prof.inst_per_access,
+    )
+
+
+for _prof in APPS.values():
+    register_scenario(_app_scenario(_prof))
+
+
+@register_scenario
+def _stress_zipf() -> Scenario:
+    """Extreme skew: 2% of pages take 90% of traffic (hotter than any app)."""
+    return Scenario(
+        name="stress/zipf-hotspot",
+        gen=ZipfHotspot(footprint_pages=64 * PAGES_PER_SP, accesses=120_000,
+                        hot_frac=0.02, zipf_alpha=1.2, hot_traffic=0.90,
+                        write_ratio=0.30),
+    )
+
+
+@register_scenario
+def _stress_phase() -> Scenario:
+    """Fast working-set drift: the window moves half its width per interval,
+    so last interval's hot set is half stale — punishes history-based
+    promotion (the Memos ranking-inversion regime)."""
+    return Scenario(
+        name="stress/phase-shift",
+        gen=PhaseShift(footprint_pages=64 * PAGES_PER_SP, accesses=120_000,
+                       ws_frac=0.25, drift_frac=0.50, hot_frac=0.20,
+                       zipf_alpha=1.1, hot_traffic=0.70, write_ratio=0.25),
+    )
+
+
+@register_scenario
+def _stress_seq() -> Scenario:
+    """Streaming sweep with zero temporal reuse (GUPS-adjacent, but strictly
+    sequential: best case for superpage TLBs, worst for hot-set monitors)."""
+    return Scenario(
+        name="stress/seq-scan",
+        gen=SequentialScan(footprint_pages=128 * PAGES_PER_SP,
+                           accesses=120_000, stride=1, write_ratio=0.30),
+    )
+
+
+@register_scenario
+def _stress_chase() -> Scenario:
+    """Dependent pointer chase over a large footprint: TLB-hostile, no skew."""
+    return Scenario(
+        name="stress/pointer-chase",
+        gen=PointerChase(footprint_pages=256 * PAGES_PER_SP, accesses=120_000,
+                         write_ratio=0.10),
+    )
+
+
+@register_scenario
+def _stress_mix() -> Scenario:
+    """Hot + streaming + chasing interleaved in one address space: the
+    inter-/intra-memory asymmetry stressor (Song et al.'s mixed regime)."""
+    return Scenario(
+        name="stress/mix",
+        gen=InterleavedMix(members=(
+            ZipfHotspot(footprint_pages=32 * PAGES_PER_SP, accesses=40_000,
+                        hot_frac=0.05, zipf_alpha=1.1, hot_traffic=0.80,
+                        write_ratio=0.35),
+            SequentialScan(footprint_pages=64 * PAGES_PER_SP, accesses=40_000,
+                           stride=1, write_ratio=0.20),
+            PointerChase(footprint_pages=64 * PAGES_PER_SP, accesses=40_000,
+                         write_ratio=0.10),
+        )),
+    )

@@ -263,11 +263,14 @@ if st is not None:
                     accesses=accesses, tags=tags,
                 )
             ),
-            apps=st.lists(st.sampled_from(PROP_APPS), min_size=0, max_size=3,
+            # min_size=1 per axis: grid() rejects lopsided axis combinations
+            # loudly; EMPTY plans are still covered via empty grid-lists in
+            # _plans() and the deterministic floors
+            apps=st.lists(st.sampled_from(PROP_APPS), min_size=1, max_size=3,
                           unique=True),
-            policies=st.lists(st.sampled_from(PROP_POLICIES), min_size=0,
+            policies=st.lists(st.sampled_from(PROP_POLICIES), min_size=1,
                               max_size=3, unique=True),
-            seeds=st.lists(st.integers(0, 5), min_size=0, max_size=3,
+            seeds=st.lists(st.integers(0, 5), min_size=1, max_size=3,
                            unique=True),
             intervals=st.integers(1, 3),
             accesses=st.sampled_from([None, 1000, 2000]),
