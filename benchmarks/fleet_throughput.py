@@ -22,6 +22,23 @@ cells/sec over a homogeneous 32-cell fleet (one app x policy, many seeds):
               only a seed vector, so generation rides the mesh instead of
               the host (target: >= 1.2x staged cells/sec on 4 host devices)
 
+The atlas-scale THROUGHPUT GATE (second emit line) runs a multi-signature
+plan (8 signatures x 128 seeds = 1024 cells in full mode; 4 x 32 quick) in
+controlled subprocesses on 4 forced host devices:
+
+  baseline    pipeline=False (the pre-pipeline double-buffered path), cold
+              compiles, per-group-fsync journal — what atlas-scale plans
+              cost before this optimization
+  pipelined   prefetch pipeline + CompileCache backed by a persistent
+              compilation cache a prior subprocess populated + batched
+              journal — the resumed/repeated-run shape the atlas lives in
+  resume      the same journal replayed by a fresh process: zero groups may
+              re-execute
+
+The gate ASSERTS pipelined >= 1.5x baseline cells/sec and that baseline,
+pipelined, resumed rows are all identical, with one cell cross-checked
+against the single-device simulate() oracle in the parent process.
+
 The fleet axis needs enough lanes for device parallelism to beat the vmap
 lanes' vectorization (per-scan-step op overhead dominates small fleets on
 CPU); 32 cells is the knee on a 4-device host mesh and matches the paper
@@ -45,12 +62,18 @@ if (
         + " --xla_force_host_platform_device_count=4"
     ).strip()
 
+import json
+import shutil
+import subprocess
+import tempfile
 import time
 
 import jax
 import numpy as np
 
 from benchmarks.common import QUICK, emit
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 APP = "streamcluster"
 # The staged/fused contrast is staging-bound, so the scenario legs use a
@@ -62,6 +85,15 @@ POLICY = "rainbow"
 FLEET = 32
 INTERVALS = 3 if QUICK else 6
 ACCESSES = 10_000 if QUICK else 60_000
+
+# Throughput-gate plan: GATE_SIGS compile signatures (MachineConfig.top_n
+# variants change monitor-state shapes, hence programs) x GATE_SEEDS cells
+# each — 1024 cells in full mode, per the atlas acceptance floor.
+GATE_SIGS = 4 if QUICK else 8
+GATE_SEEDS = 32 if QUICK else 128
+GATE_INTERVALS = 2
+GATE_ACCESSES = 1000 if QUICK else 1500
+GATE_FLOOR = 1.5
 
 
 def _bench(fn, reps: int = 2) -> float:
@@ -195,6 +227,149 @@ def _measure() -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# Atlas-scale throughput gate (pipelined vs pre-pipeline, subprocess-isolated)
+# ---------------------------------------------------------------------------
+
+
+def _gate_plan():
+    from repro.engine import fleet
+    from repro.sim.config import MachineConfig
+
+    base_top_n = MachineConfig().top_n
+    plans = [
+        fleet.SweepPlan.grid(
+            [APP], [POLICY], tuple(range(GATE_SEEDS)),
+            mc=MachineConfig(top_n=base_top_n + 8 * i),
+            intervals=GATE_INTERVALS, accesses=GATE_ACCESSES,
+        )
+        for i in range(GATE_SIGS)
+    ]
+    return sum(plans[1:], plans[0])
+
+
+def _gate_child(mode: str, out_path: str, journal: str | None) -> None:
+    """One gate leg, in a fresh process (so compile-cache state is exact)."""
+    from repro.engine import fleet
+
+    plan = _gate_plan()
+    if mode == "baseline":
+        # the pre-pipeline path: inline double buffer, per-group fsync
+        runner = fleet.FleetRunner(pipeline=False)
+        jnl = fleet.FleetJournal(journal, flush_groups=1) if journal else None
+    else:  # pipelined-cold / pipelined / resume
+        runner = fleet.FleetRunner()
+        jnl = fleet.FleetJournal(journal) if journal else None
+    t0 = time.perf_counter()
+    pairs = list(runner.run_iter(plan, journal=jnl))
+    elapsed = time.perf_counter() - t0
+    rows = sorted(
+        [c.mc.top_n, c.seed, m.ipc, m.total_cycles, m.migrations, m.mig_bytes]
+        for c, m in pairs
+    )
+    with open(out_path, "w") as f:
+        json.dump({
+            "mode": mode,
+            "elapsed": elapsed,
+            "cells": len(pairs),
+            "groups_executed": len(runner.timings),
+            "compile_s": sum(t.compile_s for t in runner.timings),
+            "stage_s": sum(t.stage_s for t in runner.timings),
+            "scan_s": sum(t.scan_s for t in runner.timings),
+            "retire_s": sum(t.retire_s for t in runner.timings),
+            "rows": rows,
+        }, f)
+
+
+def _gate() -> dict:
+    """Run the gate legs and ASSERT the pipelined floor + bit-identity."""
+    from repro.sim.config import MachineConfig
+    from repro.sim.runner import simulate
+
+    tmp = tempfile.mkdtemp(prefix="fleet_gate_")
+    cache_dir = os.path.join(tmp, "xla-cache")
+    journal = os.path.join(tmp, "gate.journal.jsonl")
+
+    def child(mode: str, cache: bool, jnl: str | None = None) -> dict:
+        out = os.path.join(tmp, f"{mode}.json")
+        env = dict(
+            os.environ,
+            PYTHONPATH=os.pathsep.join(
+                [os.path.join(ROOT, "src"), ROOT,
+                 os.environ.get("PYTHONPATH", "")]
+            ),
+            XLA_FLAGS="--xla_force_host_platform_device_count=4",
+        )
+        env.pop("REPRO_FLEET_CACHE_DIR", None)
+        if cache:
+            env["REPRO_FLEET_CACHE_DIR"] = cache_dir
+        args = [sys.executable, "-m", "benchmarks.fleet_throughput",
+                "--gate-child", mode, out] + ([jnl] if jnl else [])
+        r = subprocess.run(args, env=env, cwd=ROOT, capture_output=True,
+                           text=True, timeout=3600)
+        if r.returncode != 0:
+            raise RuntimeError(f"gate child {mode} failed:\n{r.stderr[-3000:]}")
+        with open(out) as f:
+            return json.load(f)
+
+    try:
+        # populate the persistent compilation cache (also the cold-pipelined
+        # column: pipeline alone, no cross-process cache to lean on)
+        cold = child("pipelined-cold", cache=True)
+        base = child("baseline", cache=False)
+        pipe = child("pipelined", cache=True, jnl=journal)
+        resume = child("resume", cache=True, jnl=journal)
+
+        assert base["rows"] == pipe["rows"] == cold["rows"] == resume["rows"], \
+            "gate legs disagree: pipelined path is not bit-identical"
+        assert resume["groups_executed"] == 0, (
+            f"resume re-executed {resume['groups_executed']} groups instead "
+            "of replaying the journal"
+        )
+        # single-device vmap oracle: the (default-top_n, seed 0) cell
+        one = simulate(APP, POLICY, MachineConfig(), intervals=GATE_INTERVALS,
+                       accesses=GATE_ACCESSES, seed=0)
+        top0, s0, ipc, cyc, migs, mig_b = sorted(base["rows"])[0]
+        assert (ipc, cyc, migs, mig_b) == (
+            one.ipc, one.total_cycles, one.migrations, one.mig_bytes
+        ), "gate rows diverge from the single-device simulate() oracle"
+
+        cells = base["cells"]
+        legs = {"baseline": base, "pipelined-cold": cold, "pipelined": pipe,
+                "resume": resume}
+        rows = [
+            {
+                "mode": name,
+                "cells": d["cells"],
+                "signatures": GATE_SIGS,
+                "seconds": round(d["elapsed"], 3),
+                "cells_per_sec": round(d["cells"] / d["elapsed"], 3),
+                "groups_executed": d["groups_executed"],
+                "compile_s": round(d["compile_s"], 3),
+                "stage_s": round(d["stage_s"], 3),
+                "scan_s": round(d["scan_s"], 3),
+                "retire_s": round(d["retire_s"], 3),
+            }
+            for name, d in legs.items()
+        ]
+        speedup = base["elapsed"] / pipe["elapsed"]
+        if speedup < GATE_FLOOR:
+            raise RuntimeError(
+                f"fleet throughput gate FAILED: pipelined path is only "
+                f"{speedup:.2f}x the double-buffered baseline over {cells} "
+                f"cells x {GATE_SIGS} signatures (floor: {GATE_FLOOR}x)"
+            )
+        return {
+            "rows": rows,
+            "speedup": speedup,
+            "cold_speedup": base["elapsed"] / cold["elapsed"],
+            "resume_speedup": base["elapsed"] / resume["elapsed"],
+            "cells": cells,
+        }
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 def run() -> None:
     t0 = time.time()
     out = _measure()
@@ -209,7 +384,22 @@ def run() -> None:
             f"devices={len(jax.devices())}"
         ),
     )
+    t1 = time.time()
+    gate = _gate()
+    emit(
+        "fleet_throughput_gate", gate["rows"], t1,
+        derived=(
+            f"pipelined_vs_baseline={gate['speedup']:.2f}x(floor {GATE_FLOOR}x);"
+            f"cold_pipelined_vs_baseline={gate['cold_speedup']:.2f}x;"
+            f"resume_vs_baseline={gate['resume_speedup']:.2f}x;"
+            f"cells={gate['cells']};devices=4(forced,subprocess)"
+        ),
+    )
 
 
 if __name__ == "__main__":
-    run()
+    if len(sys.argv) >= 4 and sys.argv[1] == "--gate-child":
+        _gate_child(sys.argv[2], sys.argv[3],
+                    sys.argv[4] if len(sys.argv) > 4 else None)
+    else:
+        run()

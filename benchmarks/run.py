@@ -27,6 +27,7 @@ def main() -> None:
         paper_fig13_14_sensitivity,
         paper_fig15_runtime,
         paper_table6_storage,
+        policy_atlas,
         roofline,
         serving_rainbow,
     )
@@ -44,6 +45,7 @@ def main() -> None:
         paper_fig13_14_sensitivity,
         engine_throughput,
         fleet_throughput,
+        policy_atlas,
         serving_rainbow,
         autotune_serving,
         roofline,

@@ -97,6 +97,22 @@ with tempfile.TemporaryDirectory() as td:
 print(f"  streamed + resumed: {len(barrier)} cells bit-identical to barrier run")
 EOF
 
+echo "== atlas smoke: policy atlas 2x2x2, streamed + journaled + resume-checked =="
+ATLAS_TMP="$(mktemp -d)"
+trap 'rm -rf "$ATLAS_TMP"' EXIT
+REPRO_FLEET_CACHE_DIR="$ATLAS_TMP/xla-cache" python -m benchmarks.policy_atlas \
+    --scenarios 2 --policies 2 --seeds 2 \
+    --journal "$ATLAS_TMP/atlas.jsonl" --out "$ATLAS_TMP/BENCH_atlas.json" \
+    --resume-check
+python - "$ATLAS_TMP/BENCH_atlas.json" <<'EOF'
+import json, sys
+
+atlas = json.load(open(sys.argv[1]))
+assert atlas["cells"] == 8 and atlas["winners"], atlas["config"]
+assert len(atlas["timings"]) == len(atlas["journal_timings"]) == 4
+print(f"  atlas smoke: {atlas['cells']} cells, winners={atlas['winners']}")
+EOF
+
 echo "== autotune smoke: tuned ControlPolicy beats the default on a recorded trace =="
 python - <<'EOF'
 import jax

@@ -11,12 +11,18 @@ and vmapped the seed fleet; this module owns the grid itself:
                mesh size, shards it across a 1-D "fleet" device mesh via
                shard_map of the SAME vmapped body engine_run_batch jits
                (launch.mesh.make_fleet_mesh / launch.sharding.batch_shardings),
-               and double-buffers host-side make_chunks_np staging against the
-               in-flight device scan: while group i's sharded scan runs on the
-               mesh, group i+1's traces are generated and device_put sharded
-               (async dispatch; fleet-state buffers are donated and retired
-               chunk buffers recycled, so staging reuses the previous group's
-               memory);
+               and pipelines host-side staging against the in-flight device
+               scans: a background prepare thread generates traces, stages
+               them sharded, and resolves each group's compiled executable
+               (CompileCache: AOT executables keyed by the compile-signature
+               digest, optionally backed by jax's persistent compilation
+               cache so resumed/repeated processes skip XLA entirely) up to
+               `prefetch_depth` groups ahead of retirement, recycling pooled
+               host staging buffers instead of reallocating per group
+               (fleet-state buffers are donated, so device memory is bounded
+               by the staged depth); `pipeline=False` preserves the
+               pre-pipeline inline double-buffered path as the differential
+               reference;
   FleetResult  maps every cell back to its SimMetrics, in plan order, with
                tag/field selection for figure scripts.
 
@@ -25,9 +31,12 @@ The mesh may span MULTIPLE jax processes (launch.mesh.make_fleet_mesh
 addressable shards via make_array_from_callback and retire all-gathers each
 group's (tiny) stats to every process, so the SPMD result is bit-identical
 to the single-device path. `run_iter` streams (cell, metrics) pairs as each
-group retires — reusing the same double buffer — and an optional FleetJournal
-checkpoints retired groups so a killed sweep resumes from the last retired
-group (docs/fleet.md).
+group retires — reusing the same prefetch pipeline — and an optional
+FleetJournal checkpoints retired groups (appends coalesced up to a watermark,
+one fsync per flush) so a killed sweep resumes from the last *flushed* group
+(docs/fleet.md). Per-group wall-clock timings (stage / compile / scan /
+retire) land on `FleetRunner.timings` and in the journal records, so atlas
+throughput regressions are attributable without a profiler.
 
 One engine path from a single-CPU test to a multi-process parameter study:
 every paper_fig* module, sim.runner.sweep, sensitivity sweeps, and future
@@ -43,6 +52,9 @@ import itertools
 import json
 import os
 import pathlib
+import queue
+import threading
+import time
 from typing import Any, Iterator, Mapping
 
 import jax
@@ -311,6 +323,195 @@ def _sharded_fleet_fn(spec: simloop.EngineSpec, mesh):
     return jax.jit(fn, donate_argnums=(0,))
 
 
+# ---------------------------------------------------------------------------
+# Compile caching: skip retracing/re-XLA for repeated compile signatures
+# ---------------------------------------------------------------------------
+
+#: Point this env var at a directory to persist compiled fleet programs across
+#: processes (resumed sweeps, repeated atlas runs): see
+#: enable_persistent_compile_cache.
+PERSISTENT_CACHE_ENV = "REPRO_FLEET_CACHE_DIR"
+_persistent_cache_dir: str | None = None
+
+
+def enable_persistent_compile_cache(path=None) -> str | None:
+    """Back jax's compilation cache with an on-disk directory.
+
+    `path` (or the REPRO_FLEET_CACHE_DIR env var when None) names a directory
+    where XLA executables are persisted keyed by program fingerprint — a
+    superset of the fleet compile signature, so a resumed or repeated sweep
+    in a FRESH process skips the XLA compile of every signature it has seen
+    before (the dominant cost of cold atlas-scale plans). Returns the active
+    directory, or None when unset (no-op). Thresholds are dropped to zero so
+    even fast-compiling groups persist.
+    """
+    global _persistent_cache_dir
+    path = path if path is not None else os.environ.get(PERSISTENT_CACHE_ENV)
+    if not path:
+        return None
+    path = str(path)
+    if _persistent_cache_dir != path:
+        jax.config.update("jax_compilation_cache_dir", path)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+        # jax initializes its cache handle at most once, on the FIRST compile
+        # of the process — which import-time jitted constants usually trigger
+        # long before any runner exists, permanently latching "no cache
+        # configured". Reset so the next compile re-reads the directory.
+        from jax._src import compilation_cache as _cc
+
+        _cc.reset_cache()
+        _persistent_cache_dir = path
+    return path
+
+
+def group_signature(group: FleetGroup, fleet_size: int, mesh) -> str:
+    """Digest of everything determining one group's compiled fleet program.
+
+    The probe_meta dict (shapes), the EngineSpec (policy program + geometry +
+    controller knobs), interval count, the PADDED fleet size (monitor state
+    shapes and the shard extent depend on it), and the mesh devices. Two
+    groups with equal signatures are guaranteed to lower to the same program,
+    so one AOT executable serves both.
+    """
+    blob = repr((group.spec, group.intervals, sorted(group.meta.items()),
+                 int(fleet_size), tuple(str(d) for d in mesh.devices.flat)))
+    return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+
+class CompileCache:
+    """AOT-compiled sharded fleet executables, keyed by group_signature.
+
+    The pipelined runner lowers each group's program against the exact avals
+    and shardings of its staged inputs and compiles it ahead of dispatch
+    (jax.jit(...).lower(...).compile() — bit-identical to calling the jitted
+    function, donation included). Repeated signatures across groups, plans,
+    and runs of one process hit `_exes`; with
+    enable_persistent_compile_cache, cache misses still skip the XLA backend
+    work in any process that compiled the signature before.
+
+    Thread-safe for the runner's single prepare thread + any number of
+    readers; a module-level instance (COMPILE_CACHE) is shared by default so
+    sequential FleetRunners reuse each other's compiles.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._exes: dict[str, Any] = {}
+        self.hits = 0
+        self.misses = 0
+        self.compile_seconds = 0.0
+
+    def stats(self) -> dict[str, Any]:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "entries": len(self._exes),
+                    "compile_seconds": self.compile_seconds}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._exes.clear()
+            self.hits = self.misses = 0
+            self.compile_seconds = 0.0
+
+    def get_or_compile(self, group: FleetGroup, staged, mesh):
+        """(executable, signature, compile_seconds, cached) for one group.
+
+        `staged` is the group's sharded (states, batch) — its avals are the
+        lowering inputs, so an executable can only ever be reused where
+        shapes, dtypes, AND shardings agree (group_signature covers them).
+        """
+        fleet_size = int(jax.tree.leaves(staged)[0].shape[0])
+        sig = group_signature(group, fleet_size, mesh)
+        with self._lock:
+            exe = self._exes.get(sig)
+            if exe is not None:
+                self.hits += 1
+                return exe, sig, 0.0, True
+        t0 = time.perf_counter()
+        if group.spec.source is not None:
+            body = simloop.batch_run_fused(group.spec, group.intervals)
+        else:
+            body = simloop.batch_run(group.spec)
+        jitted = jax.jit(
+            shard_map(body, mesh=mesh, in_specs=(P("fleet"), P("fleet")),
+                      out_specs=(P("fleet"), P("fleet"))),
+            donate_argnums=(0,),
+        )
+        sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                           sharding=x.sharding),
+            staged,
+        )
+        exe = jitted.lower(*sds).compile()
+        dt = time.perf_counter() - t0
+        with self._lock:
+            self.misses += 1
+            self.compile_seconds += dt
+            exe = self._exes.setdefault(sig, exe)
+        return exe, sig, dt, False
+
+
+#: Process-wide default cache; pass `compile_cache=` to FleetRunner to isolate.
+COMPILE_CACHE = CompileCache()
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupTiming:
+    """Wall-clock breakdown of one retired group (FleetRunner.timings).
+
+    stage_s    host trace generation + sharded device transfer
+    compile_s  trace/lower/XLA compile (0.0 on a CompileCache hit)
+    scan_s     host wall blocked on the group's device results at retire —
+               an upper bound on the un-overlapped scan time
+    retire_s   stats gather + per-cell metric finalization (journal I/O is
+               batched separately and excluded)
+    """
+
+    label: str
+    signature: str
+    cells: int
+    stage_s: float
+    compile_s: float
+    scan_s: float
+    retire_s: float
+    compile_cached: bool
+
+    def row(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+class _StagingPool:
+    """Recycled host staging buffers, keyed by padded batch geometry.
+
+    Atlas-scale plans stage hundreds of groups with only a handful of
+    distinct (fleet, intervals, accesses) geometries; reusing the padded
+    TraceChunks buffers avoids reallocating (and re-faulting) hundreds of MB
+    per group. A buffer is released back only after its group retires — by
+    then the sharded scan has consumed the staged copy, so the next group may
+    overwrite it even while earlier results are still being finalized.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._free: dict[tuple, list] = collections.defaultdict(list)
+        self.allocated = 0
+        self.reused = 0
+
+    def acquire(self, key: tuple, alloc):
+        with self._lock:
+            free = self._free.get(key)
+            if free:
+                self.reused += 1
+                return free.pop()
+            self.allocated += 1
+        return alloc()
+
+    def release(self, key: tuple, bufs) -> None:
+        with self._lock:
+            self._free[key].append(bufs)
+
+
 def _pad_fleet(arrs, pad: int):
     """Pad the leading fleet axis by repeating the last member `pad` times."""
     if pad == 0:
@@ -369,17 +570,44 @@ class FleetJournal:
     """Append-only JSONL checkpoint of retired groups (streamed sweeps).
 
     One header line, then one record per retired FleetGroup mapping each
-    cell's `SweepCell.key()` to its SimMetrics fields. A killed sweep leaves
-    at worst one torn tail line, which load() discards — resume re-runs that
-    group and every group after it, and appends to the same file. Only
-    process 0 of a multi-process fleet writes; every process reads (the
-    journal must live on a filesystem all workers share).
+    cell's `SweepCell.key()` to its SimMetrics fields (plus that group's
+    GroupTiming, which load() ignores). Appends are COALESCED: records buffer
+    in memory and hit the file — one write, one fsync — when `flush_groups`
+    records or `flush_bytes` of JSON accumulate, on an explicit flush()/
+    close(), or when the streaming generator finalizes (run_iter flushes in
+    its `finally`, so even a close()d iterator persists what it retired).
+    `flush_groups=1` restores the original fsync-per-group durability.
+
+    A killed sweep loses at worst the unflushed buffer plus one torn tail
+    line, which load() discards — resume re-runs those groups and appends to
+    the same file. Only process 0 of a multi-process fleet writes; every
+    process reads (the journal must live on a filesystem all workers share).
     """
 
     VERSION = 1
 
-    def __init__(self, path: str | os.PathLike):
+    def __init__(self, path: str | os.PathLike, *, flush_groups: int = 8,
+                 flush_bytes: int = 4 << 20):
+        if flush_groups < 1:
+            raise ValueError(
+                f"FleetJournal: flush_groups must be >= 1 (got {flush_groups})"
+            )
         self.path = pathlib.Path(path)
+        self.flush_groups = flush_groups
+        self.flush_bytes = flush_bytes
+        self._buf: list[str] = []
+        self._buf_bytes = 0
+
+    @property
+    def pending(self) -> int:
+        """Buffered records not yet durable (0 right after a flush)."""
+        return len(self._buf)
+
+    def __enter__(self) -> "FleetJournal":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def load(self) -> dict[str, SimMetrics]:
         """Completed cells keyed by SweepCell.key(); {} for a fresh journal."""
@@ -403,6 +631,25 @@ class FleetJournal:
                     done[key] = SimMetrics(**fields)
         return done
 
+    def load_timings(self) -> list[dict]:
+        """GroupTiming rows of every flushed group, in retirement order.
+
+        The atlas trajectory artifact: where a resumed run's wall-clock went,
+        across every process that ever appended to this journal.
+        """
+        if not self.path.exists():
+            return []
+        rows: list[dict] = []
+        with self.path.open() as f:
+            for line in f:
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    break
+                if "timing" in rec:
+                    rows.append(rec["timing"])
+        return rows
+
     def _drop_torn_tail(self) -> bool:
         """Truncate a partial last line (kill mid-write) before appending.
 
@@ -420,9 +667,33 @@ class FleetJournal:
                 data = data[:keep]
             return bool(data)
 
-    def append(self, cells: dict[SweepCell, SimMetrics]) -> None:
-        """Durably record one retired group (coordinator only, fsynced)."""
+    def append(self, cells: dict[SweepCell, SimMetrics],
+               timing: GroupTiming | None = None) -> None:
+        """Record one retired group (coordinator only); durable at the next
+        watermark flush — immediately when flush_groups == 1."""
         if jax.process_index() != 0:
+            return
+        rec: dict[str, Any] = {"cells": {
+            c.key(): dataclasses.asdict(m) for c, m in cells.items()
+        }}
+        if timing is not None:
+            rec["timing"] = timing.row()
+        line = json.dumps(rec)
+        self._buf.append(line)
+        self._buf_bytes += len(line) + 1
+        if len(self._buf) >= self.flush_groups \
+                or self._buf_bytes >= self.flush_bytes:
+            self.flush()
+
+    def flush(self) -> None:
+        """Write every buffered record in one append + one fsync.
+
+        The whole coalesced batch lands in a single write() after the torn
+        tail (if any) is truncated, so a kill during the flush still leaves
+        at worst one torn LINE — the load()-side recovery contract is
+        unchanged from the per-group-fsync journal.
+        """
+        if not self._buf or jax.process_index() != 0:
             return
         self.path.parent.mkdir(parents=True, exist_ok=True)
         lines = []
@@ -430,34 +701,69 @@ class FleetJournal:
             lines.append(json.dumps(
                 {"kind": "fleet-journal", "version": self.VERSION}
             ))
-        lines.append(json.dumps({"cells": {
-            c.key(): dataclasses.asdict(m) for c, m in cells.items()
-        }}))
+        lines.extend(self._buf)
         with self.path.open("a") as f:
             f.write("".join(ln + "\n" for ln in lines))
             f.flush()
             os.fsync(f.fileno())
+        self._buf.clear()
+        self._buf_bytes = 0
+
+    def close(self) -> None:
+        self.flush()
 
 
 class FleetRunner:
-    """Run SweepPlans over a device mesh with double-buffered trace staging.
+    """Run SweepPlans over a device mesh with pipelined trace staging.
 
-    mesh           1-D "fleet" mesh (default: make_fleet_mesh over all
-                   devices; built lazily so constructing a runner never
-                   touches jax device state). A multi-process mesh
-                   (make_fleet_mesh(processes=N)) works transparently: every
-                   process stages the full host batch, owns its device
-                   shards, and retire all-gathers each group's (tiny) stats
-                   back to every process.
-    double_buffer  keep one group's sharded scan in flight while the next
-                   group's traces are generated host-side and staged to the
-                   mesh; False retires each group before staging the next
-                   (the serial reference behavior).
+    mesh            1-D "fleet" mesh (default: make_fleet_mesh over all
+                    devices; built lazily so constructing a runner never
+                    touches jax device state). A multi-process mesh
+                    (make_fleet_mesh(processes=N)) works transparently: every
+                    process stages the full host batch, owns its device
+                    shards, and retire all-gathers each group's (tiny) stats
+                    back to every process.
+    prefetch_depth  how many groups may be staged-but-not-retired at once:
+                    a background prepare thread generates traces, stages
+                    them sharded, and resolves the compiled executable up to
+                    this many groups ahead of retirement. 2 reproduces the
+                    classic double buffer's memory bound; 1 is fully serial.
+    double_buffer   legacy alias: False is prefetch_depth=1.
+    pipeline        False disables the prepare thread, compile cache, and
+                    staging pool, restoring the pre-pipeline inline path —
+                    the differential reference the pipelined path is tested
+                    against (bit-identical by tests/test_fleet*.py).
+    compile_cache   CompileCache instance (default: the process-wide
+                    COMPILE_CACHE, so sequential runners share compiles).
+
+    Construction also arms jax's persistent compilation cache when
+    REPRO_FLEET_CACHE_DIR is set (enable_persistent_compile_cache), so
+    resumed or repeated sweeps in fresh processes skip XLA for every
+    signature compiled before. After a run, `timings` holds one GroupTiming
+    per retired group.
     """
 
-    def __init__(self, mesh=None, double_buffer: bool = True):
+    def __init__(self, mesh=None, double_buffer: bool = True, *,
+                 pipeline: bool = True, prefetch_depth: int | None = None,
+                 compile_cache: CompileCache | None = None):
+        if prefetch_depth is None:
+            prefetch_depth = 2 if double_buffer else 1
+        if prefetch_depth < 1:
+            raise ValueError(
+                f"FleetRunner: prefetch_depth must be >= 1 (got "
+                f"{prefetch_depth}); 1 is already the serial pipeline"
+            )
         self._mesh = mesh
-        self.double_buffer = double_buffer
+        self.pipeline = pipeline
+        self.prefetch_depth = prefetch_depth
+        self.compile_cache = compile_cache or COMPILE_CACHE
+        self.timings: list[GroupTiming] = []
+        self._staging_pool = _StagingPool()
+        enable_persistent_compile_cache()
+
+    @property
+    def double_buffer(self) -> bool:
+        return self.prefetch_depth > 1
 
     @property
     def mesh(self):
@@ -520,6 +826,64 @@ class FleetRunner:
             )
         return jax.device_put(target, shardings)
 
+    def _stage_pooled(self, group: FleetGroup):
+        """Pipelined staging: _stage, with pooled padded host chunk buffers.
+
+        Returns (staged, pool_key, bufs); the caller releases (pool_key,
+        bufs) back to the staging pool once the group retires. Per-cell
+        chunks are written straight into the padded buffer (no np.stack +
+        re-pad copies) and padding lanes repeat the last cell, exactly like
+        _pad_fleet. Fused groups stage only the (tiny) seed vector — nothing
+        to pool.
+        """
+        mesh = self.mesh
+        if group.spec.source is not None:
+            return self._stage(group), None, None
+        pad = -len(group.cells) % mesh.devices.size
+        n = len(group.cells) + pad
+        ii = group.intervals
+        aa = group.meta["accesses_per_interval"]
+        pool_key = (n, ii, aa)
+        bufs = self._staging_pool.acquire(pool_key, lambda: simloop.TraceChunks(
+            sp=np.empty((n, ii, aa), np.int32),
+            page=np.empty((n, ii, aa), np.int32),
+            vpn=np.empty((n, ii, aa), np.int32),
+            is_write=np.empty((n, ii, aa), bool),
+            in_dram=np.empty((n, ii, aa), bool),
+        ))
+        metas = []
+        for i, cell in enumerate(group.cells):
+            chunks, meta = simloop.make_chunks_np(
+                cell.app, cell.policy, cell.mc, cell.seed,
+                cell.intervals, cell.accesses,
+            )
+            for dst, src in zip(bufs, chunks):
+                dst[i] = src
+            metas.append(meta)
+        for j in range(len(group.cells), n):
+            for dst in bufs:
+                dst[j] = dst[len(group.cells) - 1]
+        simloop.require_uniform_meta(
+            metas + [group.meta], [c.label for c in group.cells] + ["probe"]
+        )
+        state0 = jax.tree.map(np.asarray, simloop.engine_init(group.spec))
+        states = jax.tree.map(
+            lambda x: np.broadcast_to(x, (n,) + x.shape), state0
+        )
+        target = (states, bufs)
+        shardings = batch_shardings(target, mesh)
+        if _mesh_is_multiprocess(mesh):
+            staged = jax.tree.map(
+                lambda x, s: jax.make_array_from_callback(
+                    np.shape(x), s,
+                    lambda idx, _x=x: np.ascontiguousarray(_x[idx]),
+                ),
+                target, shardings,
+            )
+        else:
+            staged = jax.device_put(target, shardings)
+        return staged, pool_key, bufs
+
     def _launch(self, group: FleetGroup):
         """Stage one group and dispatch its sharded scan (async) to the mesh."""
         states, batch = self._stage(group)
@@ -560,17 +924,19 @@ class FleetRunner:
     ) -> "FleetResult":
         """Execute every cell of the plan; metrics come back in plan order.
 
-        `stream=True` (or any `journal`) routes through `run_iter` — groups
-        are retired to the host as soon as their sharded scan completes and,
-        with a journal, checkpointed so a killed sweep resumes from the last
-        retired group. Both paths are bit-identical; the barrier path is kept
-        as the differential reference the streamed path is tested against.
+        A pipelined runner (the default) always executes through `run_iter`'s
+        prefetch pipeline; `stream`/`journal` only add incremental retirement
+        semantics for the caller and checkpointing. With `pipeline=False` and
+        neither, the pre-pipeline inline barrier loop runs instead — kept
+        verbatim as the differential reference every pipelined path is tested
+        against (all paths are bit-identical).
         """
-        if stream or journal is not None:
+        if stream or journal is not None or self.pipeline:
             metrics = dict(self.run_iter(plan, journal=journal))
             return FleetResult(
                 cells=tuple(dict.fromkeys(plan.cells)), metrics=metrics
             )
+        self.timings = []
         groups = plan_groups(plan)
         metrics: dict[SweepCell, SimMetrics] = {}
         in_flight: collections.deque = collections.deque()
@@ -592,46 +958,176 @@ class FleetRunner:
         """Stream (cell, metrics) pairs as each compile-signature group
         retires, instead of blocking until the whole plan finishes.
 
-        The double buffer is reused: group i's results are device_get while
-        group i+1's traces are being staged, so consumers (figure renderers,
+        Staging and compilation run in the prefetch pipeline (or the legacy
+        double buffer with `pipeline=False`), so consumers (figure renderers,
         CSV writers, progress bars) overlap with device work. With `journal`,
-        every retired group is appended to the checkpoint first and groups
-        already recorded there are replayed from disk (yielded up front, in
-        plan order) without staging a single trace.
+        every retired group is appended to the checkpoint (coalesced; durable
+        at the journal's flush watermark and whenever this generator
+        finalizes — including close()) and groups already recorded there are
+        replayed from disk (yielded up front, in plan order) without staging
+        a single trace. Per-group GroupTimings accumulate on `self.timings`.
         """
         if journal is not None and not isinstance(journal, FleetJournal):
             journal = FleetJournal(journal)
+        self.timings = []
         groups = plan_groups(plan)
         pending: list[FleetGroup] = groups
-        if journal is not None:
-            recorded = journal.load()
-            if _mesh_is_multiprocess(self.mesh):
-                recorded = _sync_journal_view(recorded)
-            pending = []
-            for group in groups:
-                got = {c: recorded.get(c.key()) for c in group.cells}
-                if all(m is not None for m in got.values()):
-                    yield from got.items()  # resumed from the checkpoint
-                else:
-                    pending.append(group)
+        try:
+            if journal is not None:
+                recorded = journal.load()
+                if _mesh_is_multiprocess(self.mesh):
+                    recorded = _sync_journal_view(recorded)
+                pending = []
+                for group in groups:
+                    got = {c: recorded.get(c.key()) for c in group.cells}
+                    if all(m is not None for m in got.values()):
+                        yield from got.items()  # resumed from the checkpoint
+                    else:
+                        pending.append(group)
+            if self.pipeline:
+                yield from self._pipeline_iter(pending, journal)
+            else:
+                yield from self._legacy_iter(pending, journal)
+        finally:
+            if journal is not None:
+                journal.flush()
 
+    def _legacy_iter(self, pending, journal):
+        """The pre-pipeline inline double buffer (differential reference).
+
+        Timings are attributed coarser than the pipeline's: _launch folds
+        trace staging, any jit compile, and dispatch into stage_s (there is
+        no compile cache on this path), and scan_s is the host wall blocked
+        at retire.
+        """
         in_flight: collections.deque = collections.deque()
 
         def retire_next():
             out: dict[SweepCell, SimMetrics] = {}
-            group, counters, stats = in_flight.popleft()
+            group, counters, stats, stage_s = in_flight.popleft()
+            t0 = time.perf_counter()
+            jax.block_until_ready((counters, stats))
+            t1 = time.perf_counter()
             self._retire(group, counters, stats, out)
+            cell0 = group.cells[0]
+            timing = GroupTiming(
+                label=f"{cell0.app}/{cell0.policy}",
+                signature=group_signature(
+                    group, int(jax.tree.leaves(stats)[0].shape[0]), self.mesh
+                ),
+                cells=len(group.cells),
+                stage_s=stage_s,
+                compile_s=0.0,
+                scan_s=t1 - t0,
+                retire_s=time.perf_counter() - t1,
+                compile_cached=False,
+            )
+            self.timings.append(timing)
             if journal is not None:
-                journal.append(out)
+                journal.append(out, timing=timing)
             return out.items()
 
         for group in pending:
+            t0 = time.perf_counter()
             finals, stats = self._launch(group)
-            in_flight.append((group, finals.sim.counters, stats))
+            in_flight.append(
+                (group, finals.sim.counters, stats, time.perf_counter() - t0)
+            )
             while len(in_flight) >= (2 if self.double_buffer else 1):
                 yield from retire_next()
         while in_flight:
             yield from retire_next()
+
+    def _pipeline_iter(self, pending, journal):
+        """The pipelined engine: a prepare thread stages + compiles ahead.
+
+        One background thread walks the pending groups in plan order: for
+        each it generates host traces into a pooled buffer, stages them
+        sharded to the mesh, and resolves the group's compiled executable
+        (CompileCache) — at most `prefetch_depth` groups ahead of
+        retirement, so staged memory stays bounded. The MAIN thread alone
+        dispatches the (async) sharded scans and retires them, in plan
+        order, so on a multi-process mesh collectives issue in the same
+        order on every process. On a multicore host the next group's trace
+        generation and compile overlap the in-flight scan; either way,
+        repeated signatures skip compilation entirely.
+        """
+        slots = threading.Semaphore(self.prefetch_depth)
+        ready: queue.Queue = queue.Queue()
+        stop = threading.Event()
+
+        def prepare():
+            try:
+                for group in pending:
+                    slots.acquire()
+                    if stop.is_set():
+                        return
+                    t0 = time.perf_counter()
+                    staged, pool_key, bufs = self._stage_pooled(group)
+                    t1 = time.perf_counter()
+                    exe, sig, compile_s, cached = \
+                        self.compile_cache.get_or_compile(
+                            group, staged, self.mesh)
+                    ready.put((group, staged, exe, sig, pool_key, bufs,
+                               t1 - t0, compile_s, cached))
+                ready.put(None)
+            except BaseException as e:  # re-raised on the consuming side
+                ready.put(e)
+
+        worker = threading.Thread(
+            target=prepare, name="fleet-prepare", daemon=True
+        )
+        in_flight: collections.deque = collections.deque()
+
+        def retire_next():
+            (group, counters, stats, sig, pool_key, bufs,
+             stage_s, compile_s, cached) = in_flight.popleft()
+            t0 = time.perf_counter()
+            jax.block_until_ready((counters, stats))
+            t1 = time.perf_counter()
+            out: dict[SweepCell, SimMetrics] = {}
+            self._retire(group, counters, stats, out)
+            if pool_key is not None:
+                self._staging_pool.release(pool_key, bufs)
+            slots.release()
+            cell0 = group.cells[0]
+            timing = GroupTiming(
+                label=f"{cell0.app}/{cell0.policy}",
+                signature=sig,
+                cells=len(group.cells),
+                stage_s=stage_s,
+                compile_s=compile_s,
+                scan_s=t1 - t0,
+                retire_s=time.perf_counter() - t1,
+                compile_cached=cached,
+            )
+            self.timings.append(timing)
+            if journal is not None:
+                journal.append(out, timing=timing)
+            return out.items()
+
+        worker.start()
+        try:
+            while True:
+                item = ready.get()
+                if item is None:
+                    break
+                if isinstance(item, BaseException):
+                    raise item
+                (group, staged, exe, sig, pool_key, bufs,
+                 stage_s, compile_s, cached) = item
+                finals, stats = exe(*staged)  # async dispatch
+                del staged  # states were donated; drop the host reference
+                in_flight.append((group, finals.sim.counters, stats, sig,
+                                  pool_key, bufs, stage_s, compile_s, cached))
+                while len(in_flight) >= self.prefetch_depth:
+                    yield from retire_next()
+            while in_flight:
+                yield from retire_next()
+        finally:
+            stop.set()
+            slots.release()  # unblock a prepare thread parked on acquire
+            worker.join(timeout=60)
 
     # -- trace calibration (Fig. 1 / Tables I-II, no simulation) ------------
 

@@ -489,12 +489,18 @@ def engine_run(
     )
 
 
+@functools.lru_cache(maxsize=None)
 def batch_run(spec: EngineSpec):
     """Unjitted whole-sim runner vmapped over a leading fleet axis.
 
     The single body shared by `engine_run_batch` (one-device vmap) and
     `engine.fleet`'s shard_map partitions — so the sharded fleet is the same
     program per shard, bit for bit, as the PR 1 vmap path.
+
+    Memoized per spec: callers wrap the body in jit/shard_map, whose tracing
+    caches key on function identity — a fresh closure per call would retrace
+    every group dispatch even when the compile signature repeats. (Entries
+    are closures, a few hundred bytes per distinct spec.)
     """
 
     def run(states: EngineState, chunks: TraceChunks):
@@ -604,12 +610,16 @@ def engine_run_fused(
     return _fused_scan(spec, state, seed, intervals)
 
 
+@functools.lru_cache(maxsize=None)
 def batch_run_fused(spec: EngineSpec, intervals: int):
     """Unjitted fused whole-sim runner vmapped over a leading fleet axis.
 
     The single body shared by `engine_run_fused_batch` (one-device vmap) and
     `engine.fleet`'s fused shard_map partitions — same program per shard,
     bit for bit, as the single-device fused path.
+
+    Memoized per (spec, intervals) so repeated group dispatches reuse one
+    function identity (see batch_run).
     """
     _fused_program(spec)  # staged/mismatched specs fail HERE, not at trace
 

@@ -337,6 +337,10 @@ def _worker_main(args, wenv: WorkerEnv) -> list[dict]:
     assert {c: streamed[c] for c in res} == dict(res.items()), (
         "streamed run_iter diverged from barrier run"
     )
+    # the prefetch pipeline must surface per-group timings on EVERY process
+    assert len(runner.timings) == 2 and all(
+        t.cells >= 1 and t.scan_s >= 0 for t in runner.timings
+    ), f"per-group timings missing in the fleet: {runner.timings}"
     rows = _result_rows(res)
     # the retire all-gather promises every process the same bytes — verify it
     # for real: workers publish their rows, the coordinator compares.
@@ -360,7 +364,11 @@ def _worker_main(args, wenv: WorkerEnv) -> list[dict]:
         journal.unlink()
     barrier("smoke/journal-clean")
     try:
-        first = runner.run(plan, journal=journal)
+        # batched retirement (flush_groups=2): both groups coalesce into one
+        # write; the generator-finalize flush makes them durable for replay
+        first = runner.run(
+            plan, journal=fleet.FleetJournal(journal, flush_groups=2)
+        )
         replay = runner.run(plan, journal=journal)
         assert dict(first.items()) == dict(res.items()), (
             "journaled sweep diverged from barrier run"

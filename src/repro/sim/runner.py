@@ -275,6 +275,7 @@ def sweep(
     stream: bool = False,
     journal=None,
     scenarios: list[str] = (),
+    runner=None,
 ) -> dict[tuple[str, str, int], SimMetrics]:
     """Fleet sweep: the (app x policy x seed) grid as ONE FleetRunner plan.
 
@@ -290,6 +291,10 @@ def sweep(
     `stream=True` retires groups through the incremental FleetRunner.run_iter
     path and `journal` (a path) checkpoints retired groups so a killed sweep
     resumes where it stopped — both bit-identical to the barrier path.
+
+    `runner` substitutes a configured FleetRunner (prefetch depth, compile
+    cache, pipeline=False reference mode); callers can read per-group
+    wall-clock breakdowns off `runner.timings` afterwards.
     """
     from repro.engine import fleet  # lazy: sim.__init__ imports this module
 
@@ -298,7 +303,8 @@ def sweep(
         intervals=intervals, accesses=accesses,
         counter_backend=counter_backend, scenario=tuple(scenarios),
     )
-    result = fleet.FleetRunner().run(plan, stream=stream, journal=journal)
+    runner = runner or fleet.FleetRunner()
+    result = runner.run(plan, stream=stream, journal=journal)
     return {(c.app, c.policy, c.seed): m for c, m in result.items()}
 
 

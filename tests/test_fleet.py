@@ -118,7 +118,7 @@ def test_journal_append_after_torn_tail_recovers(tmp_path):
     cell_a, cell_b = plan.cells
     m_a, m_b = _dummy_metrics(cell_a), _dummy_metrics(cell_b)
     path = tmp_path / "j.jsonl"
-    journal = fleet.FleetJournal(path)
+    journal = fleet.FleetJournal(path, flush_groups=1)  # fsync-per-group
     journal.append({cell_a: m_a})
     with path.open("ab") as f:
         f.write(b'{"cells": {"torn')  # the kill: no trailing newline
@@ -128,7 +128,7 @@ def test_journal_append_after_torn_tail_recovers(tmp_path):
     # a journal whose ONLY line is torn re-writes the header too
     path2 = tmp_path / "j2.jsonl"
     path2.write_bytes(b'{"kind": "fleet-jour')
-    fleet.FleetJournal(path2).append({cell_a: m_a})
+    fleet.FleetJournal(path2, flush_groups=1).append({cell_a: m_a})
     assert fleet.FleetJournal(path2).load() == {cell_a.key(): m_a}
     assert json.loads(path2.read_text().splitlines()[0])["kind"] == "fleet-journal"
 
@@ -365,3 +365,105 @@ def test_sharded_fleet_bit_identical_on_4_devices():
         timeout=600,
     )
     assert "FLEET_SHARDED_OK" in out.stdout, out.stderr[-2000:]
+
+# ---------------------------------------------------------------------------
+# Atlas-scale fast path: prefetch pipeline, compile cache, staging pool,
+# batched journal, per-group timings. The oracle everywhere is the inline
+# pipeline=False runner (the pre-pipeline barrier path).
+# ---------------------------------------------------------------------------
+
+def _two_sig_plan():
+    """Two compile signatures (streamcluster/soplex shapes), 2 cells each."""
+    kw = dict(intervals=2, accesses=2000)
+    return (
+        fleet.SweepPlan.grid(["streamcluster"], ["rainbow"], (0, 1), **kw)
+        + fleet.SweepPlan.grid(["soplex"], ["rainbow"], (0, 1), **kw)
+    )
+
+
+def test_pipelined_matches_legacy_across_depths():
+    """Every prefetch depth (serial, double-buffer, deeper) is bit-identical
+    to the inline barrier path, and surfaces one GroupTiming per group."""
+    plan = _two_sig_plan()
+    oracle = dict(fleet.FleetRunner(pipeline=False).run(plan).items())
+    for depth in (1, 2, 3):
+        runner = fleet.FleetRunner(prefetch_depth=depth)
+        assert dict(runner.run(plan).items()) == oracle, f"depth={depth}"
+        assert len(runner.timings) == 2
+        for t in runner.timings:
+            assert t.cells == 2 and t.signature
+            assert t.stage_s >= 0 and t.compile_s >= 0
+            assert t.scan_s >= 0 and t.retire_s >= 0
+    with pytest.raises(ValueError, match="prefetch_depth"):
+        fleet.FleetRunner(prefetch_depth=0)
+    with pytest.raises(ValueError, match="flush_groups"):
+        fleet.FleetJournal("unused.jsonl", flush_groups=0)
+
+
+def test_compile_cache_hits_across_runners():
+    """An isolated CompileCache compiles each signature once; a second runner
+    sharing it hits on every group (timings record the cached flag)."""
+    cache = fleet.CompileCache()
+    plan = _two_sig_plan()
+    r1 = fleet.FleetRunner(compile_cache=cache)
+    res1 = r1.run(plan)
+    s = cache.stats()
+    assert s["misses"] == 2 and s["hits"] == 0 and s["entries"] == 2
+    assert s["compile_seconds"] > 0
+    assert [t.compile_cached for t in r1.timings] == [False, False]
+
+    r2 = fleet.FleetRunner(compile_cache=cache)
+    res2 = r2.run(plan)
+    s = cache.stats()
+    assert s["misses"] == 2 and s["hits"] == 2 and s["entries"] == 2
+    assert [t.compile_cached for t in r2.timings] == [True, True]
+    assert all(t.compile_s == 0.0 for t in r2.timings)
+    assert dict(res2.items()) == dict(res1.items())
+
+
+def test_staging_pool_reuse_same_geometry():
+    """Two groups with identical padded geometry share one staging buffer
+    when run serially (the buffer is released at retire, re-acquired next)."""
+    plan = fleet.SweepPlan.grid(
+        ["streamcluster"], ["rainbow", "flat-static"], (0, 1),
+        intervals=2, accesses=2000,
+    )
+    assert len(fleet.plan_groups(plan)) == 2
+    runner = fleet.FleetRunner(prefetch_depth=1)
+    oracle = fleet.FleetRunner(pipeline=False).run(plan)
+    assert dict(runner.run(plan).items()) == dict(oracle.items())
+    pool = runner._staging_pool
+    assert pool.allocated == 1 and pool.reused == 1
+
+
+def test_run_iter_journal_batches_and_records_timings(tmp_path):
+    """flush_groups=2: the first retired group stays in the coalesce buffer
+    (nothing durable), the watermark flushes both, and the journal carries
+    per-group GroupTiming rows that load() ignores but load_timings() sees."""
+    plan = _two_sig_plan()
+    (g0, g1) = fleet.plan_groups(plan)
+    path = tmp_path / "batched.jsonl"
+    jnl = fleet.FleetJournal(path, flush_groups=2)
+    runner = fleet.FleetRunner()
+    it = runner.run_iter(plan, journal=jnl)
+    for _ in g0.cells:
+        next(it)
+    assert jnl.pending == 1 and not path.exists()  # coalescing, not durable
+    rest = list(it)
+    assert jnl.pending == 0 and len(rest) == len(g1.cells)
+
+    reloaded = fleet.FleetJournal(path)
+    assert set(reloaded.load()) == {c.key() for c in plan.cells}
+    timing_rows = reloaded.load_timings()
+    assert len(timing_rows) == 2
+    for row, t in zip(timing_rows, runner.timings):
+        assert row == t.row()
+        assert {"label", "signature", "cells", "stage_s", "compile_s",
+                "scan_s", "retire_s", "compile_cached"} <= set(row)
+
+    # resuming from the journal replays everything: zero groups re-executed
+    loaded = reloaded.load()
+    r2 = fleet.FleetRunner()
+    res = r2.run(plan, journal=path)
+    assert not r2.timings
+    assert {c.key(): m for c, m in res.items()} == loaded

@@ -33,11 +33,15 @@ def _run_script(script: str):
 
 @functools.lru_cache(maxsize=1)
 def _reference_result():
-    """Single-device (vmap-path) barrier oracle for the shared smoke plan."""
+    """Single-device (vmap-path) barrier oracle for the shared smoke plan.
+
+    pipeline=False is the pre-pipeline inline path — the reference every
+    pipelined/streamed/journaled leg must reproduce bit for bit.
+    """
     from repro.engine import fleet
     from repro.launch.distributed import _smoke_plan
 
-    return fleet.FleetRunner().run(_smoke_plan())
+    return fleet.FleetRunner(pipeline=False).run(_smoke_plan())
 
 
 def _reference_rows():
@@ -69,16 +73,27 @@ def test_two_process_fleet_bit_identical(tmp_path):
 
 def test_streamed_run_iter_matches_barrier_run_cell_by_cell():
     """run_iter == run, cell for cell (in-parent; the multi-device streamed
-    equality runs inside the 2x2 fleet worker of the test above)."""
+    equality runs inside the 2x2 fleet worker of the test above).
+
+    The default runner is the PIPELINED engine (prepare thread + compile
+    cache + pooled staging), so this pins pipelined streaming to the
+    pipeline=False reference — and per-group timings must be surfaced.
+    """
     from repro.engine import fleet
     from repro.launch.distributed import _smoke_plan
 
     plan = _smoke_plan()
     barrier = _reference_result()
-    streamed = list(fleet.FleetRunner().run_iter(plan))
+    runner = fleet.FleetRunner()
+    streamed = list(runner.run_iter(plan))
     assert len(streamed) == len(barrier) == 5
     for cell, metrics in streamed:
         assert metrics == barrier[cell], cell.label
+    # per-group wall-clock attribution rides on the runner
+    assert len(runner.timings) == len(fleet.plan_groups(plan))
+    for t in runner.timings:
+        assert t.cells >= 1 and t.stage_s >= 0 and t.compile_s >= 0
+        assert t.scan_s >= 0 and t.retire_s >= 0
     # run(stream=True) is the same path wrapped into a FleetResult
     res = fleet.FleetRunner().run(plan, stream=True)
     assert dict(res.items()) == dict(barrier.items())
@@ -90,6 +105,9 @@ def test_kill_and_resume_matches_uninterrupted(tmp_path):
     Worker 1 retires exactly one group then os._exit's (no cleanup, the
     real kill shape); worker 2 resumes against the same journal and must
     (a) not recompute the journaled group and (b) reproduce the oracle.
+
+    flush_groups=1 pins the legacy every-group durability contract (the
+    batched default is covered by test_batched_journal_kill_mid_coalesce).
     """
     journal = tmp_path / "sweep.journal.jsonl"
     rows_out = tmp_path / "resumed_rows.json"
@@ -101,7 +119,8 @@ def test_kill_and_resume_matches_uninterrupted(tmp_path):
 
         plan = _smoke_plan()
         (g0, g1) = fleet.plan_groups(plan)
-        it = fleet.FleetRunner().run_iter(plan, journal={str(journal)!r})
+        jnl = fleet.FleetJournal({str(journal)!r}, flush_groups=1)
+        it = fleet.FleetRunner().run_iter(plan, journal=jnl)
         for _ in g0.cells:
             next(it)
         os._exit(41)  # killed mid-sweep: the generator never finalizes
@@ -120,8 +139,8 @@ def test_kill_and_resume_matches_uninterrupted(tmp_path):
         plan = _smoke_plan()
         runner = fleet.FleetRunner()
         staged = []
-        real_stage = runner._stage
-        runner._stage = lambda g: (staged.append(g), real_stage(g))[1]
+        real_stage = runner._stage_pooled
+        runner._stage_pooled = lambda g: (staged.append(g), real_stage(g))[1]
         res = runner.run(plan, journal={str(journal)!r})
         # group 0 must come from the journal, not from a re-run
         assert [len(g.cells) for g in staged] == [2], staged
@@ -136,3 +155,81 @@ def test_kill_and_resume_matches_uninterrupted(tmp_path):
     assert len(lines) == 3
     assert set(json.loads(lines[1])["cells"]) == first_group_keys
     assert set(json.loads(lines[2])["cells"]).isdisjoint(first_group_keys)
+
+
+def test_batched_journal_kill_mid_coalesce(tmp_path):
+    """Hard kill mid-coalesce under batched retirement (flush_groups=2).
+
+    Worker 1 retires all three groups of a 3-signature plan but is killed
+    while the third group is still coalescing in the append buffer: the
+    watermark flushed groups 0-1, so exactly those survive on disk. Worker 2
+    resumes, re-executes ONLY the lost group, and the merged result is
+    bit-identical to an uninterrupted pipeline=False run — with every cell
+    key appearing exactly once across the final journal.
+    """
+    journal = tmp_path / "batched.journal.jsonl"
+    rows_out = tmp_path / "resumed_rows.json"
+    plan_src = """
+        def _plan():
+            from repro.engine import fleet
+            kw = dict(intervals=2, accesses=1500)
+            return (
+                fleet.SweepPlan.grid(["streamcluster"], ["rainbow"], (0, 1), **kw)
+                + fleet.SweepPlan.grid(["soplex"], ["rainbow"], (0, 1), **kw)
+                + fleet.SweepPlan.grid(["mcf"], ["rainbow"], (0, 1), **kw)
+            )
+    """
+
+    killed = _run_script(plan_src + f"""
+        import os
+        from repro.engine import fleet
+
+        plan = _plan()
+        groups = fleet.plan_groups(plan)
+        assert len(groups) == 3
+        jnl = fleet.FleetJournal({str(journal)!r}, flush_groups=2)
+        it = fleet.FleetRunner().run_iter(plan, journal=jnl)
+        for _ in range(sum(len(g.cells) for g in groups)):
+            next(it)  # all three groups retired; group 2 is still buffered
+        assert jnl.pending == 1, jnl.pending
+        os._exit(41)  # the coalesced tail never reaches disk
+    """)
+    assert killed.returncode == 41, killed.stderr[-4000:]
+    lines = journal.read_text().splitlines()
+    assert len(lines) == 3  # header + the two watermark-flushed groups
+    assert json.loads(lines[0])["kind"] == "fleet-journal"
+    flushed_keys = set()
+    for line in lines[1:]:
+        keys = set(json.loads(line)["cells"])
+        assert keys.isdisjoint(flushed_keys)
+        flushed_keys |= keys
+
+    resumed = _run_script(plan_src + f"""
+        import json
+        from repro.engine import fleet
+        from repro.launch.distributed import _result_rows
+
+        plan = _plan()
+        runner = fleet.FleetRunner()
+        staged = []
+        real_stage = runner._stage_pooled
+        runner._stage_pooled = lambda g: (staged.append(g), real_stage(g))[1]
+        jnl = fleet.FleetJournal({str(journal)!r}, flush_groups=2)
+        res = runner.run(plan, journal=jnl)
+        # only the lost (unflushed) group is re-executed
+        assert [len(g.cells) for g in staged] == [2], staged
+
+        oracle = fleet.FleetRunner(pipeline=False).run(plan)
+        assert dict(res.items()) == dict(oracle.items())
+        json.dump(_result_rows(res), open({str(rows_out)!r}, "w"))
+        print("RESUME_OK")
+    """)
+    assert "RESUME_OK" in resumed.stdout, resumed.stderr[-4000:]
+
+    # final journal: header + 3 group records, each cell key exactly once
+    lines = journal.read_text().splitlines()
+    assert len(lines) == 4
+    all_keys = []
+    for line in lines[1:]:
+        all_keys.extend(json.loads(line)["cells"])
+    assert len(all_keys) == len(set(all_keys)) == 6
