@@ -1,11 +1,14 @@
 """Shared benchmark helpers: workload sets, CSV emission, quick/full modes."""
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
 
 QUICK = os.environ.get("BENCH_QUICK", "1") != "0"
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # quick mode: subset of apps + short traces (CI-friendly); full mode: the
 # paper's complete workload table (BENCH_QUICK=0)
@@ -24,6 +27,22 @@ def sim_kwargs():
     # per-app access counts.
     return {"intervals": 7, "accesses": 50_000} if QUICK else {
         "intervals": 8, "accesses": None}
+
+
+def write_bench_json(name: str, payload: dict) -> str:
+    """Write BENCH_<name>.json at the repo root (machine-readable results).
+
+    Every payload carries `benchmark`, `quick`, and a one-line `headline`;
+    benchmarks.run aggregates whatever BENCH_*.json files exist at the end
+    and scripts/ci.sh asserts the schema of the gate-bearing ones.
+    """
+    payload = dict(payload, benchmark=name, quick=QUICK)
+    path = os.path.join(ROOT, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
+    return path
 
 
 def emit(name: str, rows: list[dict], t0: float, derived: str = "") -> None:

@@ -11,15 +11,39 @@ Compares three ways of driving the same Rainbow simulation:
   scanned+fused   — same scan with the fused one-pass counting kernel path
                     ("ref" oracle off-TPU, the Pallas kernel on TPU).
 
+Then two PR 7 hot-path artifacts:
+
+  per-phase profile — `engine_run(..., profile=True)`: where each interval's
+      wall time goes (tlb walk / observe / plan / apply), with XLA
+      compiled-cost analysis per phase (engine.profile; docs/engine.md).
+  HOT-PATH GATE — warm `engine_run` with the vectorized fast path
+      (EngineSpec.fastpath=True, the default) vs the pre-overhaul reference
+      ops (fastpath=False: per-access serial lookups, full argsort selection,
+      per-vpn shootdown scan, f32 histogram adds).  Each leg runs in its own
+      subprocess (same isolation discipline as the fleet throughput gate) and
+      dumps its per-interval stats + final counters; the parent ASSERTS the
+      legs are bit-identical and that the rainbow fast path clears
+      GATE_FLOOR x the reference.
+
+Results land in BENCH_engine.json at the repo root (aggregated by
+benchmarks.run, schema-checked by scripts/ci.sh).
+
 Run: PYTHONPATH=src python -m benchmarks.engine_throughput
 """
 from __future__ import annotations
 
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
 import time
 
 import jax
+import numpy as np
 
-from benchmarks.common import QUICK, emit
+from benchmarks.common import QUICK, ROOT, emit, write_bench_json
 from repro.sim.config import MachineConfig
 from repro.sim.runner import simulate_eager
 
@@ -28,6 +52,12 @@ POLICY = "rainbow"
 INTERVALS = 6 if QUICK else 10
 ACCESSES = 20_000 if QUICK else 120_000
 SEED = 7
+
+# Hot-path gate: the floor applies to the headline rainbow leg (the paper's
+# system — TLB walk + bitmap cache + monitor/plan/apply all active); the
+# other policies ride along for bit-identity and informational speedups.
+GATE_FLOOR = 1.4
+GATE_POLICIES = ("rainbow", "flat-static", "hscc-4kb-mig")
 
 
 def _bench(fn, reps: int = 3) -> float:
@@ -96,6 +126,158 @@ def _measure() -> dict:
     return {"rows": rows, "speedup": speedup}
 
 
+# ---------------------------------------------------------------------------
+# Per-phase profile (engine.profile via engine_run(..., profile=True))
+# ---------------------------------------------------------------------------
+
+
+def _profile() -> dict:
+    """Phase-attributed interval costs for the headline rainbow workload."""
+    from repro.engine import simloop
+
+    mc = MachineConfig()
+    chunks, meta = simloop.make_chunks(APP, POLICY, mc, SEED, INTERVALS, ACCESSES)
+    spec = simloop.EngineSpec(
+        policy=POLICY, mc=mc,
+        num_superpages=meta["num_superpages"],
+        footprint_pages=meta["footprint_pages"],
+    )
+    _, _, prof = simloop.engine_run(
+        spec, simloop.engine_init(spec), chunks, profile=True
+    )
+    d = prof.as_dict()
+    total_wall = sum(p["wall_s"] for p in d["phases"].values()) or 1.0
+    rows = [
+        {
+            "phase": name,
+            "wall_s": round(p["wall_s"], 4),
+            "wall_frac": round(p["wall_s"] / total_wall, 3),
+            "compile_s": round(p["compile_s"], 4),
+            "calls": p["calls"],
+            "gflops_per_call": round(p["flops"] / 1e9, 4),
+            "mbytes_per_call": round(p["bytes_accessed"] / 1e6, 3),
+        }
+        for name, p in d["phases"].items()
+    ]
+    return {"rows": rows, "profile": d}
+
+
+# ---------------------------------------------------------------------------
+# Hot-path gate (fastpath=True vs fastpath=False, subprocess-isolated)
+# ---------------------------------------------------------------------------
+
+
+def _gate_child(mode: str, out_path: str) -> None:
+    """One gate leg in a fresh process: warm engine_run per policy + digest.
+
+    `mode` selects the compiled program: "fast" = the PR 7 vectorized hot
+    path (EngineSpec default), "reference" = the pre-overhaul ops kept under
+    fastpath=False.  The digest (per-interval stats + final counters, exact
+    float64 of the f32 values) lets the parent assert bit-identity.
+    """
+    from repro.engine import simloop
+
+    fastpath = mode == "fast"
+    mc = MachineConfig()
+    legs = {}
+    for policy in GATE_POLICIES:
+        chunks, meta = simloop.make_chunks(
+            APP, policy, mc, SEED, INTERVALS, ACCESSES
+        )
+        spec = simloop.EngineSpec(
+            policy=policy, mc=mc,
+            num_superpages=meta["num_superpages"],
+            footprint_pages=meta["footprint_pages"],
+            fastpath=fastpath,
+        )
+        state0 = simloop.engine_init(spec)
+        state, stats = simloop.engine_run(spec, state0, chunks)  # compile + warm
+        jax.block_until_ready((state, stats))
+        t = _bench(
+            lambda: jax.block_until_ready(
+                simloop.engine_run(spec, state0, chunks)
+            ),
+            reps=3 if QUICK else 2,
+        )
+        digest = [
+            np.asarray(x, np.float64).reshape(-1).tolist() for x in stats
+        ] + [float(np.asarray(c)) for c in state.sim.counters]
+        legs[policy] = {"seconds": t, "digest": digest}
+    with open(out_path, "w") as f:
+        json.dump({
+            "mode": mode,
+            "intervals": INTERVALS,
+            "accesses_per_interval": ACCESSES,
+            "legs": legs,
+        }, f)
+
+
+def _gate() -> dict:
+    """Run both legs in subprocesses; assert bit-identity + the rainbow floor."""
+    tmp = tempfile.mkdtemp(prefix="engine_gate_")
+
+    def child(mode: str) -> dict:
+        out = os.path.join(tmp, f"{mode}.json")
+        env = dict(
+            os.environ,
+            PYTHONPATH=os.pathsep.join(
+                [os.path.join(ROOT, "src"), ROOT,
+                 os.environ.get("PYTHONPATH", "")]
+            ),
+        )
+        args = [sys.executable, "-m", "benchmarks.engine_throughput",
+                "--gate-child", mode, out]
+        r = subprocess.run(args, env=env, cwd=ROOT, capture_output=True,
+                           text=True, timeout=3600)
+        if r.returncode != 0:
+            raise RuntimeError(f"gate child {mode} failed:\n{r.stderr[-3000:]}")
+        with open(out) as f:
+            return json.load(f)
+
+    try:
+        ref = child("reference")
+        fast = child("fast")
+        total_accesses = INTERVALS * ACCESSES
+        rows, per_policy = [], {}
+        for policy in GATE_POLICIES:
+            a, b = ref["legs"][policy], fast["legs"][policy]
+            assert a["digest"] == b["digest"], (
+                f"hot-path gate FAILED: fastpath SimMetrics inputs diverge "
+                f"from the reference ops on {policy}"
+            )
+            sp = a["seconds"] / b["seconds"]
+            per_policy[policy] = {
+                "reference_s": round(a["seconds"], 4),
+                "fast_s": round(b["seconds"], 4),
+                "speedup": round(sp, 3),
+                "accesses_per_sec": round(total_accesses / b["seconds"], 1),
+            }
+            rows.append({
+                "policy": policy,
+                "intervals": INTERVALS,
+                "accesses_per_interval": ACCESSES,
+                "reference_s": round(a["seconds"], 4),
+                "fast_s": round(b["seconds"], 4),
+                "speedup": round(sp, 3),
+                "bit_identical": True,
+            })
+        speedup = per_policy[POLICY]["speedup"]
+        if speedup < GATE_FLOOR:
+            raise RuntimeError(
+                f"engine hot-path gate FAILED: fastpath warm engine_run is "
+                f"only {speedup:.2f}x the pre-overhaul reference on {POLICY} "
+                f"(floor: {GATE_FLOOR}x)"
+            )
+        return {
+            "rows": rows,
+            "speedup": speedup,
+            "per_policy": per_policy,
+            "floor": GATE_FLOOR,
+        }
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 def run() -> None:
     t0 = time.time()
     out = _measure()
@@ -103,7 +285,45 @@ def run() -> None:
         "engine_throughput", out["rows"], t0,
         derived=f"scanned_vs_host_speedup={out['speedup']:.1f}x",
     )
+    t1 = time.time()
+    prof = _profile()
+    emit("engine_profile", prof["rows"], t1,
+         derived=f"intervals={INTERVALS};policy={POLICY}")
+    t2 = time.time()
+    gate = _gate()
+    emit(
+        "engine_hotpath_gate", gate["rows"], t2,
+        derived=(
+            f"fastpath_vs_reference={gate['speedup']:.2f}x"
+            f"(floor {GATE_FLOOR}x);policies={len(GATE_POLICIES)};"
+            "subprocess-isolated"
+        ),
+    )
+    write_bench_json("engine", {
+        "unit": "accesses_per_sec",
+        "app": APP,
+        "policy": POLICY,
+        "intervals": INTERVALS,
+        "accesses_per_interval": ACCESSES,
+        "rows": out["rows"],
+        "scanned_vs_host_speedup": round(out["speedup"], 3),
+        "profile": prof["profile"],
+        "gate": {
+            "floor": GATE_FLOOR,
+            "speedup": gate["speedup"],
+            "per_policy": gate["per_policy"],
+            "bit_identical": True,
+        },
+        "headline": (
+            f"fastpath {gate['speedup']:.2f}x reference warm engine_run "
+            f"(floor {GATE_FLOOR}x), bit-identical on "
+            f"{len(GATE_POLICIES)} policies"
+        ),
+    })
 
 
 if __name__ == "__main__":
-    run()
+    if len(sys.argv) >= 4 and sys.argv[1] == "--gate-child":
+        _gate_child(sys.argv[2], sys.argv[3])
+    else:
+        run()

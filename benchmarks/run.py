@@ -8,8 +8,40 @@ where `derived` carries the paper-claim comparison for EXPERIMENTS.md.
 """
 from __future__ import annotations
 
+import glob
+import json
+import os
 import sys
 import traceback
+
+
+def aggregate() -> None:
+    """Summarize every BENCH_*.json the modules wrote at the repo root.
+
+    Each file carries a `headline` string and (when the module has a floor)
+    a `gate` object with `floor` + `speedup`; this prints the one-screen
+    roll-up the CI log and EXPERIMENTS.md link to.
+    """
+    from benchmarks.common import ROOT
+
+    paths = sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json")))
+    if not paths:
+        return
+    print("\n===== BENCH_*.json aggregate =====")
+    for p in paths:
+        try:
+            with open(p) as f:
+                d = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"{os.path.basename(p)}: unreadable ({e})")
+            continue
+        gate = d.get("gate") or {}
+        status = ""
+        if "floor" in gate and "speedup" in gate:
+            ok = gate["speedup"] >= gate["floor"]
+            status = f" [gate {'PASS' if ok else 'FAIL'}]"
+        print(f"{os.path.basename(p)}: {d.get('headline', '(no headline)')}"
+              f"{status}")
 
 
 def main() -> None:
@@ -59,6 +91,7 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
             failed.append(name)
+    aggregate()
     if failed:
         print(f"\nFAILED benchmarks: {failed}")
         sys.exit(1)

@@ -141,6 +141,33 @@ print(f"  {res.summary()}")
 print("autotune smoke OK")
 EOF
 
+echo "== engine throughput smoke: hot-path gate (fastpath >= 1.4x, bit-identical) + BENCH_engine.json schema =="
+python -m benchmarks.engine_throughput
+python - <<'EOF'
+import json
+
+from benchmarks.engine_throughput import GATE_FLOOR, GATE_POLICIES, POLICY
+
+bench = json.load(open("BENCH_engine.json"))
+for key in ("benchmark", "quick", "unit", "rows", "headline",
+            "scanned_vs_host_speedup", "profile", "gate"):
+    assert key in bench, f"BENCH_engine.json missing {key!r}"
+assert bench["unit"] == "accesses_per_sec"
+gate = bench["gate"]
+assert gate["floor"] == GATE_FLOOR and gate["bit_identical"] is True
+assert gate["speedup"] >= GATE_FLOOR, (
+    f"hot-path gate below floor in BENCH_engine.json: {gate['speedup']}")
+assert set(gate["per_policy"]) == set(GATE_POLICIES)
+for leg in gate["per_policy"].values():
+    assert {"reference_s", "fast_s", "speedup", "accesses_per_sec"} <= set(leg)
+phases = bench["profile"]["phases"]
+assert {"tlb", "observe", "plan", "apply"} <= set(phases), sorted(phases)
+for p in phases.values():
+    assert {"wall_s", "compile_s", "calls", "flops", "bytes_accessed"} <= set(p)
+print(f"  engine gate: {POLICY} fastpath {gate['speedup']:.2f}x reference "
+      f"(floor {GATE_FLOOR}x), profile phases: {sorted(phases)}")
+EOF
+
 echo "== hscc parity: STREAMED fleet vs recorded snapshot (spot check, rel-err 0.0) =="
 python scripts/validate_hscc_parity.py --stream --apps soplex
 echo "  (full table: scripts/validate_hscc_parity.py [--stream])"

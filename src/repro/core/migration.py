@@ -201,18 +201,25 @@ def plan_migrations(
     k = cand_sp.shape[0]
     base_benefit = migration_benefit(cand_reads, cand_writes, timing)
     base_benefit = jnp.where(cand_sp >= 0, base_benefit, -jnp.inf)
-    cand_order = jnp.argsort(-base_benefit)
+    # Descending benefit via top_k over the full lane set: identical order to
+    # the former stable argsort(-base_benefit) (top_k breaks ties lower-index
+    # first, exactly like a stable ascending sort of the negation) and hands
+    # back the sorted benefits for free, saving the post-sort gather.
+    c_base, cand_order = jax.lax.top_k(base_benefit, k)
 
     # Victim preference: class priority then LRU. Exclude slots already caching a
     # candidate (cannot evict what we are about to install — caller dedupes).
     prio = dram.slot_state.astype(jnp.float32) * 1e9 + dram.last_touch.astype(
         jnp.float32
     )
-    victim_order = jnp.argsort(prio)
     n_slots = dram.slot_state.shape[0]
 
     take = min(k, n_slots)
-    vslots = victim_order[:take].astype(jnp.int32)
+    # Partial selection: only the `take` cheapest victims are ever paired with
+    # a candidate column, so top_k(-prio, take) replaces the full slot argsort
+    # (prio >= 0, so the negation is exact; tie-break matches stable argsort).
+    _, victim_idx = jax.lax.top_k(-prio, take)
+    vslots = victim_idx.astype(jnp.int32)
     if k > take:  # pad victim columns up to k with -1 (static shapes)
         vslots = jnp.concatenate([vslots, jnp.full((k - take,), -1, jnp.int32)])
 
@@ -230,7 +237,6 @@ def plan_migrations(
     c_page = cand_page[cand_order]
     c_r = cand_reads[cand_order]
     c_w = cand_writes[cand_order]
-    c_base = base_benefit[cand_order]
 
     # Adjusted benefit: Eq. 1 into free slots, Eq. 2 against occupied victims.
     adj = jnp.where(
@@ -248,8 +254,13 @@ def plan_migrations(
         evict_dirty=migrate & ~v_free & v_dirty,
         benefit=adj,
     )
-    # Un-sort back to caller's candidate order.
-    inv = jnp.argsort(cand_order)
+    # Un-sort back to caller's candidate order: the inverse of a permutation
+    # is a conflict-free scatter (inv[order[i]] = i), no second sort needed.
+    inv = (
+        jnp.zeros((k,), cand_order.dtype)
+        .at[cand_order]
+        .set(jnp.arange(k, dtype=cand_order.dtype))
+    )
     return jax.tree.map(lambda a: a[inv], plan_sorted)
 
 

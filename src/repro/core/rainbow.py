@@ -196,16 +196,27 @@ def observe(
     return dataclasses.replace(st, s1=s1, s2_reads=s2r, s2_writes=s2w, dram=dram)
 
 
-def end_interval(
-    cfg: RainbowConfig, st: RainbowState, timing: TimingParams
-) -> tuple[RainbowState, IntervalReport]:
-    """Close the interval: classify hot pages, admit migrations, rotate monitors."""
+def plan_interval(cfg: RainbowConfig, st: RainbowState, timing: TimingParams):
+    """First half of end_interval: classify hot pages + admit migrations.
+
+    Returns the control.plan_and_apply outcome (plan, remap', dram',
+    threshold', counts). Split out so the per-phase profiler
+    (engine.profile) can time the planning cost separately; end_interval
+    composes plan_interval + apply_interval unchanged.
+    """
     control, ctrl = _control_cfg(cfg)
     reads, writes = counting.stage2_split_rw(st.s2_reads, st.s2_writes)
-    out = control.plan_and_apply(
+    return control.plan_and_apply(
         ctrl, reads, writes, st.s2_reads.psn,
         st.remap, st.dram, st.threshold, timing, now=st.interval,
     )
+
+
+def apply_interval(
+    cfg: RainbowConfig, st: RainbowState, out
+) -> tuple[RainbowState, IntervalReport]:
+    """Second half of end_interval: rotate monitors + commit controller state."""
+    control, ctrl = _control_cfg(cfg)
     s1, new_psn, dram = control.rotate_monitors(ctrl, st.s1, out.dram)
 
     new_st = dataclasses.replace(
@@ -231,6 +242,13 @@ def end_interval(
         threshold=out.threshold,
     )
     return new_st, report
+
+
+def end_interval(
+    cfg: RainbowConfig, st: RainbowState, timing: TimingParams
+) -> tuple[RainbowState, IntervalReport]:
+    """Close the interval: classify hot pages, admit migrations, rotate monitors."""
+    return apply_interval(cfg, st, plan_interval(cfg, st, timing))
 
 
 def interval_step(

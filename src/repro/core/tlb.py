@@ -91,3 +91,41 @@ def split_tlb_lookup(
 
 def split_tlb_invalidate(st: SplitTLB, vpn: jax.Array) -> SplitTLB:
     return SplitTLB(l1=tlb_invalidate(st.l1, vpn), l2=tlb_invalidate(st.l2, vpn))
+
+
+def _invalidate_tags_many(tags: jax.Array, vpns: jax.Array) -> jax.Array:
+    """tags with every entry whose tag appears in `vpns` set to -1.
+
+    The sequential shootdown only clears vpn inside its own set (vpn % sets),
+    so the membership test is masked to entries whose tag maps to the row it
+    sits in — on states the lookup path built the two are the same (a tag is
+    only ever installed in its home set), but the equivalence must hold for
+    ARBITRARY states (tests/test_hotpath.py fills sets adversarially).
+    """
+    sets = tags.shape[0]
+    matched = (tags[:, :, None] == vpns[None, None, :]).any(-1)
+    home_row = (tags % sets) == jnp.arange(sets, dtype=tags.dtype)[:, None]
+    return jnp.where(matched & home_row, jnp.int32(-1), tags)
+
+
+def split_tlb_invalidate_many(st: SplitTLB, vpns: jax.Array) -> SplitTLB:
+    """Batch shootdown of a vpn list (vectorized; -1 lanes are no-ops).
+
+    Invalidation only ever writes -1 where tag == vpn and never touches lru,
+    so folding the per-vpn sequential loop into one broadcast membership test
+    per level is order-independent and idempotent — bit-identical to scanning
+    `split_tlb_invalidate` over the list (duplicates and -1 padding lanes
+    included; pinned by tests/test_hotpath.py). Shared by the engine's
+    shootdown step and the eager oracle's Policy._invalidate_4k.
+    """
+    vpns = vpns.astype(jnp.int32)
+    return SplitTLB(
+        l1=TLBState(
+            tags=_invalidate_tags_many(st.l1.tags, vpns),
+            lru=st.l1.lru, sets=st.l1.sets, ways=st.l1.ways,
+        ),
+        l2=TLBState(
+            tags=_invalidate_tags_many(st.l2.tags, vpns),
+            lru=st.l2.lru, sets=st.l2.sets, ways=st.l2.ways,
+        ),
+    )

@@ -171,29 +171,34 @@ def plan_and_apply(
     blocks); admission runs Eq. 1/2 against the slot manager best-first into
     victims cheapest-first, then the remap/bitmap tables evict + install.
     """
+    # Counters stay in their native monitor dtypes (uint16 stage-2 ->
+    # int32 counter_value) until this single float32 conversion at Eq. 1;
+    # the conversion is exact (saturating counters cap at 32767 << 2**24).
     reads = reads.astype(jnp.float32)
     writes = writes.astype(jnp.float32)
     n, p = reads.shape
 
-    flat_sp = jnp.repeat(psn, p)
-    flat_page = jnp.tile(jnp.arange(p, dtype=jnp.int32), n)
-    flat_r = reads.reshape(-1)
-    flat_w = writes.reshape(-1)
-
-    score = migration_benefit(flat_r, flat_w, timing)
-    score = jnp.where(flat_sp >= 0, score, -jnp.inf)
+    # Score in [N, P] directly (same elementwise values as the former
+    # repeat/tile flattening) and recover candidate coordinates from the
+    # row-major top_k index — no [N*P] repeat/tile index materialization.
+    valid_row = psn >= 0
+    score = migration_benefit(reads, writes, timing)
+    score = jnp.where(valid_row[:, None], score, -jnp.inf)
     # Exclude pages already resident in the performance tier.
-    already, _ = translate(remap, jnp.maximum(flat_sp, 0), flat_page)
-    score = jnp.where(already & (flat_sp >= 0), -jnp.inf, score)
+    already, _ = translate(
+        remap, jnp.maximum(psn, 0)[:, None], jnp.arange(p, dtype=jnp.int32)[None, :]
+    )
+    score = jnp.where(already & valid_row[:, None], -jnp.inf, score)
     if extra_exclude is not None:
-        score = jnp.where(extra_exclude.reshape(-1), -jnp.inf, score)
+        score = jnp.where(extra_exclude, -jnp.inf, score)
+    score = score.reshape(-1)
 
     k = min(cfg.max_moves, score.shape[0])
-    _, top_idx = jax.lax.top_k(score, k)
-    cand_sp = jnp.where(score[top_idx] > -jnp.inf, flat_sp[top_idx], -1)
-    cand_page = flat_page[top_idx]
-    cand_r = flat_r[top_idx]
-    cand_w = flat_w[top_idx]
+    top_score, top_idx = jax.lax.top_k(score, k)
+    cand_sp = jnp.where(top_score > -jnp.inf, psn[top_idx // p], -1)
+    cand_page = (top_idx % p).astype(jnp.int32)
+    cand_r = reads.reshape(-1)[top_idx]
+    cand_w = writes.reshape(-1)[top_idx]
 
     plan = plan_migrations(cand_sp, cand_page, cand_r, cand_w, dram, timing, threshold)
     dram = dram_apply_plan(dram, plan, cand_sp, cand_page, now)

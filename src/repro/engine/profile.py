@@ -1,0 +1,211 @@
+"""Per-phase engine profiler: `engine_run(..., profile=True)`.
+
+The scanned engine is one fused XLA program — great for throughput, opaque
+for attribution. This module re-runs the SAME per-interval ops (same
+functions, same order, so the final EngineState / IntervalStats are
+bit-identical to `engine_run`; asserted by tests/test_hotpath.py) but drives
+the intervals from the host through phase-split compiles, timing each phase
+with `block_until_ready` and attaching XLA's compiled-cost analysis
+(flops / bytes accessed) per phase.
+
+Phases (per-policy anatomy; see docs/engine.md):
+
+  synth    fused specs only: on-device chunk synthesis from the scenario
+  tlb      residency translate + the per-access TLB/bitmap walk
+  observe  rainbow: stage-1/stage-2/DRAM-tier counting (rb.observe)
+  plan     rainbow: classify + admit (control.plan_and_apply);
+           HSCC ports: the whole fixed-shape utility-admission program
+  apply    rainbow: monitor rotation + controller-state commit + shootdowns;
+           HSCC 4K: shootdowns
+
+The first call of each phase compiles; that wall time is reported separately
+as `compile_s` so `wall_s` stays a clean per-interval execution cost (with a
+1-interval run every phase therefore shows wall_s == 0).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rainbow as rb
+from repro.sim.policies import machine_timing
+
+
+@dataclasses.dataclass
+class PhaseCost:
+    wall_s: float = 0.0  # execution wall time, compile excluded
+    compile_s: float = 0.0  # first-call (trace + compile + run) wall time
+    calls: int = 0  # timed executions contributing to wall_s
+    flops: float = 0.0  # XLA cost analysis, per call (0.0 when unavailable)
+    bytes_accessed: float = 0.0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class EngineProfile:
+    intervals: int
+    total_wall_s: float
+    phases: dict[str, PhaseCost]
+
+    def as_dict(self) -> dict:
+        return {
+            "intervals": self.intervals,
+            "total_wall_s": self.total_wall_s,
+            "phases": {k: v.as_dict() for k, v in self.phases.items()},
+        }
+
+
+def _cost_analysis(compiled) -> dict[str, float]:
+    """Normalized {flops, bytes accessed} from a Compiled, {} when absent."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    if not isinstance(ca, dict):
+        return {}
+    return {
+        k: float(v) for k, v in ca.items() if isinstance(v, (int, float))
+    }
+
+
+class _Phase:
+    """One jitted phase: compile-on-first-use, then timed dispatches."""
+
+    def __init__(self, name: str, fn):
+        self.name = name
+        self._jit = jax.jit(fn)
+        self._compiled = None
+        self.cost = PhaseCost()
+
+    def __call__(self, *args):
+        if self._compiled is None:
+            t0 = time.perf_counter()
+            self._compiled = self._jit.lower(*args).compile()
+            out = self._compiled(*args)
+            jax.block_until_ready(out)
+            self.cost.compile_s = time.perf_counter() - t0
+            ca = _cost_analysis(self._compiled)
+            self.cost.flops = ca.get("flops", 0.0)
+            self.cost.bytes_accessed = ca.get("bytes accessed", 0.0)
+            return out
+        t0 = time.perf_counter()
+        out = self._compiled(*args)
+        jax.block_until_ready(out)
+        self.cost.wall_s += time.perf_counter() - t0
+        self.cost.calls += 1
+        return out
+
+
+def run_profiled(spec, state, chunks, *, seed=None, intervals: int | None = None):
+    """Host-driven, phase-timed equivalent of engine_run / engine_run_fused.
+
+    Staged mode: pass `chunks` (TraceChunks [I, A]). Fused mode: pass
+    chunks=None plus seed/intervals (spec.source must be set). Returns
+    (final EngineState, IntervalStats [I], EngineProfile) with state/stats
+    bit-identical to the scanned run.
+    """
+    from repro.engine import simloop
+
+    t_start = time.perf_counter()
+    fused = chunks is None
+    if fused:
+        if intervals is None:
+            raise ValueError("profiled fused run needs intervals=")
+        setup, emit = simloop._fused_program(spec)
+        seed = jnp.asarray(seed, jnp.int32)
+        n_intervals = intervals
+    else:
+        n_intervals = int(jax.tree_util.tree_leaves(chunks)[0].shape[0])
+
+    mt = machine_timing(spec.mc)
+    policy = spec.policy
+    phases: dict[str, _Phase] = {}
+
+    def phase(name, fn):
+        phases[name] = _Phase(name, fn)
+        return phases[name]
+
+    if fused:
+        p_synth = phase(
+            "synth",
+            lambda aux, sd, i: simloop.synth_chunk(spec, emit, aux, sd, i),
+        )
+
+    p_tlb = phase(
+        "tlb",
+        lambda st, ch: simloop._access_scan(
+            spec, st.sim, ch, simloop._residency(spec, st, ch)
+        ),
+    )
+
+    if policy == "rainbow":
+        cfg = simloop._rainbow_cfg(spec)
+        p_observe = phase(
+            "observe",
+            lambda pol, ch: rb.observe(
+                cfg, pol, ch.sp, ch.page, ch.is_write, pol.interval
+            ),
+        )
+        p_plan = phase("plan", lambda pol: rb.plan_interval(cfg, pol, mt))
+
+        def _apply(sim, pol, out):
+            pol, rep = rb.apply_interval(cfg, pol, out)
+            stats, inval = simloop._rainbow_finish(spec, rep)
+            return simloop._invalidate_4k(sim, inval, spec.fastpath), pol, stats
+
+        p_apply = phase("apply", _apply)
+    elif policy == "hscc-4kb-mig":
+        p_plan = phase(
+            "plan", lambda pol, ch: simloop._hscc4k_migrate(spec, pol, ch)
+        )
+        p_apply = phase(
+            "apply",
+            lambda sim, inval: simloop._invalidate_4k(sim, inval, spec.fastpath),
+        )
+    elif policy == "hscc-2mb-mig":
+        p_plan = phase(
+            "plan", lambda pol, ch: simloop._hscc2m_migrate(spec, pol, ch)
+        )
+
+    if fused:
+        t0 = time.perf_counter()
+        aux = setup(seed)
+        jax.block_until_ready(aux)
+        phases["synth"].cost.compile_s += time.perf_counter() - t0
+
+    stats_per_interval: list[Any] = []
+    for i in range(n_intervals):
+        if fused:
+            chunk = p_synth(aux, seed, jnp.asarray(i, jnp.int32))
+        else:
+            chunk = jax.tree.map(lambda x: x[i], chunks)
+        sim = p_tlb(state, chunk)
+        if policy == "rainbow":
+            pol = p_observe(state.pol, chunk)
+            out = p_plan(pol)
+            sim, pol, stats = p_apply(sim, pol, out)
+        elif policy == "hscc-4kb-mig":
+            pol, stats, inval = p_plan(state.pol, chunk)
+            sim = p_apply(sim, inval)
+        elif policy == "hscc-2mb-mig":
+            pol, stats, _ = p_plan(state.pol, chunk)
+        else:
+            pol, stats = state.pol, simloop._zero_stats()
+        state = simloop.EngineState(sim=sim, pol=pol)
+        stats_per_interval.append(stats)
+
+    stats = jax.tree.map(lambda *xs: jnp.stack(xs), *stats_per_interval)
+    profile = EngineProfile(
+        intervals=n_intervals,
+        total_wall_s=time.perf_counter() - t_start,
+        phases={name: p.cost for name, p in phases.items()},
+    )
+    return state, stats, profile

@@ -38,7 +38,7 @@ import numpy as np
 
 from repro.core import rainbow as rb
 from repro.core.remap import translate
-from repro.core.tlb import SplitTLB, tlb_invalidate
+from repro.core.tlb import SplitTLB, split_tlb_invalidate_many, tlb_invalidate
 from repro.engine.policy import ControlPolicy, sim_policy_for
 from repro.sim import tlbsim
 from repro.sim import trace as trace_mod
@@ -93,6 +93,14 @@ class EngineSpec:
     max_invalidate: int = 256  # 4KB-TLB shootdowns applied per interval (eager cap)
     control: ControlPolicy | None = None
     source: TraceSource | None = None
+    # fastpath=True routes the hot path through the vectorized/fused interval
+    # runner (tlbsim.make_interval_runner), batch shootdowns, and cumsum-based
+    # first-k selection. fastpath=False keeps the pre-overhaul reference ops
+    # (serial make_access_step scan, argsort selection, per-vpn shootdown
+    # scan). Both compiles are bit-identical — the reference path exists as
+    # the subprocess-isolated speedup baseline and as the differential anchor
+    # for tests (tests/test_hotpath.py, tests/test_engine.py).
+    fastpath: bool = True
 
     def control_policy(self) -> ControlPolicy:
         """The effective ControlPolicy of this compile (stateful policies)."""
@@ -250,32 +258,74 @@ def require_uniform_meta(metas: list[dict], labels: list[str]) -> dict:
 # ---------------------------------------------------------------------------
 
 
-def _first_k_valid(values: jax.Array, valid: jax.Array, k: int) -> jax.Array:
-    """First k `values` whose lane is valid, in lane order; -1 padding."""
-    order = jnp.argsort(~valid, stable=True)
-    vals = jnp.where(valid[order], values[order], -1).astype(jnp.int32)
-    if vals.shape[0] >= k:
-        return vals[:k]
-    return jnp.concatenate([vals, jnp.full((k - vals.shape[0],), -1, jnp.int32)])
+def _first_k_valid(
+    values: jax.Array, valid: jax.Array, k: int, fastpath: bool = True
+) -> jax.Array:
+    """First k `values` whose lane is valid, in lane order; -1 padding.
+
+    One shared implementation for engine + eager oracle (utils.select): the
+    fast path is the sort-free masked-cumsum scatter, the reference the
+    pre-overhaul stable argsort; tests/test_hotpath.py pins them
+    bit-identical across masks and edge floors.
+    """
+    from repro.utils.select import first_k_valid, first_k_valid_ref
+
+    if not fastpath:
+        return first_k_valid_ref(values, valid, k)
+    return first_k_valid(values, valid, k)
 
 
-def _invalidate_4k(sim: tlbsim.SimState, vpns: jax.Array) -> tlbsim.SimState:
+def _invalidate_4k(
+    sim: tlbsim.SimState, vpns: jax.Array, fastpath: bool = True
+) -> tlbsim.SimState:
     """Shoot down a fixed-length vpn list in the 4KB split TLB.
 
     -1 lanes are exact no-ops (they only rewrite already-invalid entries), so
-    this matches the eager Policy._invalidate_4k host loop bit for bit.
+    this matches the eager Policy._invalidate_4k host path bit for bit.
+
+    Fast path: the shared vectorized batch shootdown
+    (core.tlb.split_tlb_invalidate_many — one broadcast membership test per
+    level). The reference path keeps the pre-overhaul per-vpn sequential
+    scan; tests/test_hotpath.py pins the two bit-identical.
     """
+    if not fastpath:
 
-    def body(tlb4: SplitTLB, v):
-        return SplitTLB(
-            l1=tlb_invalidate(tlb4.l1, v), l2=tlb_invalidate(tlb4.l2, v)
-        ), None
+        def body(tlb4: SplitTLB, v):
+            return SplitTLB(
+                l1=tlb_invalidate(tlb4.l1, v), l2=tlb_invalidate(tlb4.l2, v)
+            ), None
 
-    tlb4, _ = jax.lax.scan(body, sim.tlb4, vpns)
-    return sim._replace(tlb4=tlb4)
+        tlb4, _ = jax.lax.scan(body, sim.tlb4, vpns)
+        return sim._replace(tlb4=tlb4)
+
+    return sim._replace(tlb4=split_tlb_invalidate_many(sim.tlb4, vpns))
 
 
-def _histograms(idx: jax.Array, is_write: jax.Array, n: int):
+def _histograms(idx: jax.Array, is_write: jax.Array, n: int, fastpath: bool = True):
+    """Per-unit read/write counts as float32 histograms.
+
+    Fast path: accumulate in int32 and convert once — scatter-adds of 0/1 in
+    int32 are cheaper than float32 and the conversion is exact while per-unit
+    counts stay below 2**24 (see docs/engine.md; accesses per interval are
+    ~1e4-1e6, so the bound has ~16x headroom even if every access hits one
+    unit). The reference path scatters float32 ones directly.
+    """
+    if fastpath:
+        ones = jnp.ones_like(idx, dtype=jnp.int32)
+        zeros = jnp.zeros_like(ones)
+        reads = (
+            jnp.zeros((n,), jnp.int32)
+            .at[idx]
+            .add(jnp.where(is_write, zeros, ones))
+            .astype(jnp.float32)
+        )
+        writes = (
+            jnp.zeros((n,), jnp.int32)
+            .at[idx]
+            .add(jnp.where(is_write, ones, zeros))
+            .astype(jnp.float32)
+        )
+        return reads, writes
     reads = jnp.zeros((n,), jnp.float32).at[idx].add(
         jnp.where(is_write, 0.0, 1.0)
     )
@@ -321,22 +371,28 @@ def engine_init(spec: EngineSpec) -> EngineState:
     return EngineState(sim=sim, pol=pol)
 
 
-def _rainbow_migrate(spec: EngineSpec, pol, chunk):
-    cfg = _rainbow_cfg(spec)
-    pol, rep = rb.interval_step(
-        cfg, pol, chunk.sp, chunk.page, chunk.is_write, machine_timing(spec.mc)
-    )
+def _rainbow_finish(spec: EngineSpec, rep) -> tuple[IntervalStats, jax.Array]:
+    """Shootdown list + interval stats from a rainbow IntervalReport."""
     # NVM->DRAM migration needs NO shootdown (superpage mapping unchanged);
     # only DRAM->NVM writeback shoots down the 4KB entries (paper §III-F).
     ev_valid = rep.plan.evict_sp >= 0
     ev_vpn = rep.plan.evict_sp * PAGES_PER_SP + rep.plan.evict_page
-    inval = _first_k_valid(ev_vpn, ev_valid, spec.max_invalidate)
+    inval = _first_k_valid(ev_vpn, ev_valid, spec.max_invalidate, spec.fastpath)
     stats = IntervalStats(
         migrations=rep.n_migrated,
         evictions=rep.n_evicted,
         dirty_evictions=rep.n_dirty_evicted,
         shootdowns=rep.n_evicted,
     )
+    return stats, inval
+
+
+def _rainbow_migrate(spec: EngineSpec, pol, chunk):
+    cfg = _rainbow_cfg(spec)
+    pol, rep = rb.interval_step(
+        cfg, pol, chunk.sp, chunk.page, chunk.is_write, machine_timing(spec.mc)
+    )
+    stats, inval = _rainbow_finish(spec, rep)
     return pol, stats, inval
 
 
@@ -408,7 +464,7 @@ def _hscc4k_migrate(spec: EngineSpec, pol: HsccPolicyState, chunk):
     mc, fp = spec.mc, spec.footprint_pages
     cpol = spec.control_policy()  # "hscc-4kb" preset unless overridden
     vpn = jnp.minimum(chunk.vpn, fp - 1)
-    reads, writes = _histograms(vpn, chunk.is_write, fp)
+    reads, writes = _histograms(vpn, chunk.is_write, fp, spec.fastpath)
     dirty = pol.dirty | (pol.resident & (writes > 0))
     free = jnp.maximum(cpol.hot_slots - pol.slots_used, 0)
     resident, dirty, n_free, stats, cand, ok = _hscc_admit(
@@ -420,14 +476,14 @@ def _hscc4k_migrate(spec: EngineSpec, pol: HsccPolicyState, chunk):
     pol = HsccPolicyState(
         resident=resident, dirty=dirty, slots_used=pol.slots_used + n_free
     )
-    inval = _first_k_valid(cand, ok, 64)  # eager: _invalidate_4k(cand[:64])
+    inval = _first_k_valid(cand, ok, 64, spec.fastpath)  # eager: _invalidate_4k(cand[:64])
     return pol, stats, inval
 
 
 def _hscc2m_migrate(spec: EngineSpec, pol: HsccPolicyState, chunk):
     mc, nsp = spec.mc, spec.num_superpages
     cpol = spec.control_policy()  # "hscc-2mb" preset unless overridden
-    reads, writes = _histograms(chunk.sp, chunk.is_write, nsp)
+    reads, writes = _histograms(chunk.sp, chunk.is_write, nsp, spec.fastpath)
     dirty = pol.dirty | (pol.resident & (writes > 0))
     free = jnp.maximum(cpol.hot_slots - pol.resident.sum().astype(jnp.int32), 0)
     resident, dirty, _, stats, _, _ = _hscc_admit(
@@ -444,26 +500,44 @@ def _hscc2m_migrate(spec: EngineSpec, pol: HsccPolicyState, chunk):
 # ---------------------------------------------------------------------------
 
 
+def _residency(
+    spec: EngineSpec, state: EngineState, chunk: TraceChunks
+) -> jax.Array:
+    """Per-access fast-tier residency at interval start (policy-specific)."""
+    if spec.policy == "rainbow":
+        in_dram, _ = translate(state.pol.remap, chunk.sp, chunk.page)
+    elif spec.policy == "hscc-4kb-mig":
+        in_dram = state.pol.resident[
+            jnp.minimum(chunk.vpn, spec.footprint_pages - 1)
+        ]
+    elif spec.policy == "hscc-2mb-mig":
+        in_dram = state.pol.resident[chunk.sp]
+    else:
+        in_dram = chunk.in_dram
+    return in_dram
+
+
+def _access_scan(
+    spec: EngineSpec, sim: tlbsim.SimState, chunk: TraceChunks, in_dram: jax.Array
+) -> tlbsim.SimState:
+    """The per-access translation walk (fast interval runner or reference scan)."""
+    if spec.fastpath:
+        run = tlbsim.make_interval_runner(POLICY_KINDS[spec.policy], spec.mc)
+        return run(sim, chunk.vpn, chunk.sp, in_dram, chunk.is_write)
+    step = tlbsim.make_access_step(POLICY_KINDS[spec.policy], spec.mc)
+    sim, _ = jax.lax.scan(
+        step, sim, (chunk.vpn, chunk.sp, in_dram, chunk.is_write)
+    )
+    return sim
+
+
 def engine_step(
     spec: EngineSpec, state: EngineState, chunk: TraceChunks
 ) -> tuple[EngineState, IntervalStats]:
     """One interval, device-resident: residency -> access scan -> migrate."""
     policy = spec.policy
-    if policy == "rainbow":
-        in_dram, _ = translate(state.pol.remap, chunk.sp, chunk.page)
-    elif policy == "hscc-4kb-mig":
-        in_dram = state.pol.resident[
-            jnp.minimum(chunk.vpn, spec.footprint_pages - 1)
-        ]
-    elif policy == "hscc-2mb-mig":
-        in_dram = state.pol.resident[chunk.sp]
-    else:
-        in_dram = chunk.in_dram
-
-    step = tlbsim.make_access_step(POLICY_KINDS[policy], spec.mc)
-    sim, _ = jax.lax.scan(
-        step, state.sim, (chunk.vpn, chunk.sp, in_dram, chunk.is_write)
-    )
+    in_dram = _residency(spec, state, chunk)
+    sim = _access_scan(spec, state.sim, chunk, in_dram)
 
     inval = None
     if policy == "rainbow":
@@ -475,18 +549,74 @@ def engine_step(
     else:
         pol, stats = state.pol, _zero_stats()
     if inval is not None:
-        sim = _invalidate_4k(sim, inval)
+        sim = _invalidate_4k(sim, inval, spec.fastpath)
     return EngineState(sim=sim, pol=pol), stats
 
 
 @functools.partial(jax.jit, static_argnames=("spec",))
-def engine_run(
+def _engine_run_jit(
     spec: EngineSpec, state: EngineState, chunks: TraceChunks
 ) -> tuple[EngineState, IntervalStats]:
-    """The whole simulation as one lax.scan over interval chunks."""
     return jax.lax.scan(
         lambda st, ch: engine_step(spec, st, ch), state, chunks
     )
+
+
+@functools.partial(jax.jit, static_argnames=("spec",), donate_argnums=(1,))
+def _engine_run_donated(
+    spec: EngineSpec, state: EngineState, chunks: TraceChunks
+) -> tuple[EngineState, IntervalStats]:
+    return jax.lax.scan(
+        lambda st, ch: engine_step(spec, st, ch), state, chunks
+    )
+
+
+def _dealias(state):
+    """Copy leaves that repeat a buffer, so the pytree is safe to donate.
+
+    Init helpers legitimately reuse one device array across fields
+    (zero_counters' 14 scalars, dram_init's zeros) — XLA rejects donating
+    the same buffer twice, so duplicates get a one-off copy here. First
+    occurrence keeps the original buffer and still donates in place.
+    """
+    seen: set[int] = set()
+
+    def one(x):
+        if isinstance(x, jax.Array):
+            if id(x) in seen:
+                return jnp.array(x)
+            seen.add(id(x))
+        return x
+
+    return jax.tree.map(one, state)
+
+
+def engine_run(
+    spec: EngineSpec,
+    state: EngineState,
+    chunks: TraceChunks,
+    *,
+    donate: bool = False,
+    profile: bool = False,
+):
+    """The whole simulation as one lax.scan over interval chunks.
+
+    donate=True donates the input EngineState's buffers to the scan carry
+    (the caller must not reuse `state` afterwards — sim.runner.simulate
+    qualifies, benchmarks that re-run from one state0 do not).
+
+    profile=True instead drives the intervals from the host through
+    phase-split compiles and returns (state, stats, EngineProfile) — same
+    ops in the same order, so the results are bit-identical to the scanned
+    run (asserted in tests/test_hotpath.py); see engine.profile.
+    """
+    if profile:
+        from repro.engine.profile import run_profiled
+
+        return run_profiled(spec, state, chunks)
+    if donate:
+        return _engine_run_donated(spec, _dealias(state), chunks)
+    return _engine_run_jit(spec, state, chunks)
 
 
 @functools.lru_cache(maxsize=None)
@@ -603,11 +733,43 @@ def _fused_scan(
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "intervals"))
-def engine_run_fused(
+def _engine_run_fused_jit(
     spec: EngineSpec, state: EngineState, seed, intervals: int
 ) -> tuple[EngineState, IntervalStats]:
-    """Fused counterpart of engine_run: a seed in, a full simulation out."""
     return _fused_scan(spec, state, seed, intervals)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("spec", "intervals"), donate_argnums=(1,)
+)
+def _engine_run_fused_donated(
+    spec: EngineSpec, state: EngineState, seed, intervals: int
+) -> tuple[EngineState, IntervalStats]:
+    return _fused_scan(spec, state, seed, intervals)
+
+
+def engine_run_fused(
+    spec: EngineSpec,
+    state: EngineState,
+    seed,
+    intervals: int,
+    *,
+    donate: bool = False,
+    profile: bool = False,
+):
+    """Fused counterpart of engine_run: a seed in, a full simulation out.
+
+    donate/profile behave as in engine_run (the profiled run synthesizes each
+    interval's chunk host-driven via the same scenario program and reports it
+    as a separate "synth" phase).
+    """
+    if profile:
+        from repro.engine.profile import run_profiled
+
+        return run_profiled(spec, state, None, seed=seed, intervals=intervals)
+    if donate:
+        return _engine_run_fused_donated(spec, _dealias(state), seed, intervals)
+    return _engine_run_fused_jit(spec, state, seed, intervals)
 
 
 @functools.lru_cache(maxsize=None)

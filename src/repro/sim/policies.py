@@ -23,11 +23,12 @@ import numpy as np
 
 from repro.core import rainbow as rb
 from repro.core.migration import TimingParams, make_timing
-from repro.core.tlb import tlb_invalidate
+from repro.core.tlb import split_tlb_invalidate_many
 from repro.engine.policy import sim_policy_for
 from repro.sim import tlbsim
 from repro.sim.config import PAGES_PER_SP, MachineConfig
 from repro.sim.trace import Trace
+from repro.utils.select import first_k_valid
 
 
 def machine_timing(mc: MachineConfig) -> TimingParams:
@@ -135,15 +136,13 @@ class Policy:
         return res
 
     def _invalidate_4k(self, vpns: np.ndarray) -> None:
-        from repro.core.tlb import SplitTLB
-
-        tlb4 = self.sim.tlb4
-        for v in vpns[:256]:
-            tlb4 = SplitTLB(
-                l1=tlb_invalidate(tlb4.l1, jnp.asarray(v)),
-                l2=tlb_invalidate(tlb4.l2, jnp.asarray(v)),
-            )
-        self.sim = self.sim._replace(tlb4=tlb4)
+        # Shared vectorized batch shootdown (same helper the engine's
+        # fast path uses; bit-identical to the former per-vpn host loop —
+        # -1 / duplicate lanes are no-ops, lru is untouched).
+        vpns = jnp.asarray(vpns, jnp.int32)[:256]
+        self.sim = self.sim._replace(
+            tlb4=split_tlb_invalidate_many(self.sim.tlb4, vpns)
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -218,10 +217,10 @@ class Rainbow(Policy):
         # NVM->DRAM migration needs NO shootdown (superpage mapping unchanged);
         # only DRAM->NVM writeback shoots down the 4KB entries (paper §III-F).
         shootdowns = evictions
-        ev = np.asarray(rep.plan.evict_sp)
-        evp = np.asarray(rep.plan.evict_page)
-        evicted_vpn = (ev[ev >= 0].astype(np.int64) * PAGES_PER_SP + evp[ev >= 0])
-        self._invalidate_4k(evicted_vpn.astype(np.int32))
+        # Same first-k selection the engine's shootdown step uses (shared
+        # helper; -1-padded lanes are exact no-ops in the batch invalidate).
+        ev_vpn = rep.plan.evict_sp * PAGES_PER_SP + rep.plan.evict_page
+        self._invalidate_4k(first_k_valid(ev_vpn, rep.plan.evict_sp >= 0, 256))
         return IntervalResult(
             counters=tlbsim.zero_counters(),
             migrations=migrations,

@@ -167,6 +167,7 @@ def simulate(
     engine: bool = True,
     counter_backend: str = "jax",
     fused: bool = False,
+    fastpath: bool = True,
 ) -> SimMetrics:
     """Simulate (app x policy) over N intervals and aggregate SimMetrics.
 
@@ -174,7 +175,9 @@ def simulate(
     (repro.workloads). `fused=True` (scenarios only) synthesizes each
     interval's chunk INSIDE the engine scan instead of staging host-generated
     arrays — bit-identical to the staged path by the workloads differential
-    gate (tests/test_workloads.py).
+    gate (tests/test_workloads.py). `fastpath=False` compiles the engine
+    against the pre-overhaul reference ops (EngineSpec.fastpath) — the
+    differential anchor for the vectorized hot path.
     """
     if not engine:
         if fused:
@@ -207,14 +210,17 @@ def simulate(
         footprint_pages=meta["footprint_pages"],
         counter_backend=counter_backend,
         source=source,
+        fastpath=fastpath,
     )
+    # The freshly built engine_init state is never reused, so its buffers are
+    # donated to the scan — the carry updates in place instead of copying.
     if fused:
         state, stats = simloop.engine_run_fused(
-            spec, simloop.engine_init(spec), seed, intervals
+            spec, simloop.engine_init(spec), seed, intervals, donate=True
         )
     else:
         state, stats = simloop.engine_run(
-            spec, simloop.engine_init(spec), chunks
+            spec, simloop.engine_init(spec), chunks, donate=True
         )
     totals = totals_from_stats(policy, mc, stats, meta["accesses_per_interval"])
     return finalize_metrics(

@@ -1,0 +1,39 @@
+"""Shared fixed-shape selection primitives (engine + eager oracle).
+
+One implementation, imported by both the scanned engine (engine.simloop) and
+the eager reference policies (sim.policies), so the differential suites
+exercise a single selection code path instead of two copies that can drift
+(PR 7 satellite). The pre-overhaul argsort form is kept as
+`first_k_valid_ref` — the fastpath=False engine compiles against it and
+tests/test_hotpath.py pins both bit-identical across masks and edge floors.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import Array
+
+
+def first_k_valid_ref(values: Array, valid: Array, k: int) -> Array:
+    """Reference: stable full argsort (the pre-overhaul hot path)."""
+    order = jnp.argsort(~valid, stable=True)
+    vals = jnp.where(valid[order], values[order], -1).astype(jnp.int32)
+    if vals.shape[0] >= k:
+        return vals[:k]
+    return jnp.concatenate([vals, jnp.full((k - vals.shape[0],), -1, jnp.int32)])
+
+
+def first_k_valid(values: Array, valid: Array, k: int) -> Array:
+    """First k `values` whose lane is valid, in lane order; -1 padding.
+
+    A masked cumsum ranks the valid lanes (each rank is unique, so the
+    scatter is conflict-free) and the first k scatter into place — no sort.
+    Bit-identical to `first_k_valid_ref` for every mask and floor
+    (all-valid, all-invalid, k > n-valid, duplicate values).
+    """
+    rank = jnp.cumsum(valid.astype(jnp.int32)) - 1
+    dst = jnp.where(valid & (rank < k), rank, k)
+    return (
+        jnp.full((k,), -1, jnp.int32)
+        .at[dst]
+        .set(values.astype(jnp.int32), mode="drop")
+    )

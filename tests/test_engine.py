@@ -64,6 +64,31 @@ def test_engine_hscc_snapshot_parity(policy):
         simulate_eager("streamcluster", policy, intervals=2, accesses=2000)
 
 
+SWEEP_SCENARIOS = ["stress/zipf-hotspot", "syn/GUPS", "stress/seq-scan"]
+ALL_POLICIES = [
+    "flat-static", "dram-only", "rainbow", "hscc-4kb-mig", "hscc-2mb-mig",
+]
+
+
+@pytest.mark.parametrize("scenario", SWEEP_SCENARIOS)
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_fastpath_sweep_policies_x_scenarios(policy, scenario):
+    """PR 7 hot-path sweep: on every policy x registered scenario, the
+    vectorized fast path (staged AND fused) is bit-identical to the
+    fastpath=False reference program — and to the eager oracle where one
+    exists (the HSCC ports have no eager loop; the reference spec + the
+    parity snapshot anchor them instead)."""
+    kw = dict(intervals=2, accesses=2500, seed=13)
+    fast = simulate(scenario, policy, **kw)
+    ref = simulate(scenario, policy, fastpath=False, **kw)
+    assert dataclasses.asdict(fast) == dataclasses.asdict(ref)
+    fused = simulate(scenario, policy, fused=True, **kw)
+    assert dataclasses.asdict(fast) == dataclasses.asdict(fused)
+    if policy in ("flat-static", "dram-only", "rainbow"):
+        eager = simulate_eager(scenario, policy, **kw)
+        assert dataclasses.asdict(fast) == dataclasses.asdict(eager)
+
+
 def test_engine_vmap_over_seeds_shapes():
     """sweep vmaps (seed fleet) per cell; shapes and per-seed values line up."""
     from repro.engine import simloop
