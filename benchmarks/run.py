@@ -62,6 +62,7 @@ def main() -> None:
         policy_atlas,
         roofline,
         serving_rainbow,
+        timing_contention,
     )
 
     modules = [
@@ -77,6 +78,7 @@ def main() -> None:
         paper_fig13_14_sensitivity,
         engine_throughput,
         fleet_throughput,
+        timing_contention,
         policy_atlas,
         serving_rainbow,
         autotune_serving,

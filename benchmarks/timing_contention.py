@@ -1,0 +1,118 @@
+"""Bank-geometry x policy sweep through the queueing timing model.
+
+Runs the fleet over {flat, infinite-banks, roomy, constrained} queue
+geometries and reports how the rainbow-vs-HSCC gap moves when DRAM/NVM
+bandwidth is scarce. Under the flat cost model superpage migration looks
+cheap per unit of hotness captured; once migration traffic queues behind
+demand accesses on real channels, HSCC-2MB's 512-page bulk copies back the
+NVM queues up for whole intervals while Rainbow's page-granularity
+lightweight migrations charge a tiny fraction of those cycles — so
+constraining the geometry swings the rainbow/hscc-2mb IPC ratio from below
+1 (flat) to ~2x (constrained). The flat == infinite-banks rows double as
+the live differential check of the flat-floor invariant (docs/timing.md).
+
+Emits BENCH_timing.json with a `gate`: `speedup` is the constrained-over-flat
+shift of the mean rainbow/hscc-2mb IPC ratio (floor 1.0 = the gap must
+widen, not shrink), plus `flat_floor_bitwise` which scripts/ci.sh asserts
+is true.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks.common import QUICK, emit, write_bench_json
+from repro.sim import runner
+from repro.timing import QueueGeometry
+
+MIG_POLICIES = ["rainbow", "hscc-4kb-mig", "hscc-2mb-mig"]
+
+#: geometry label -> (timing_model, QueueGeometry | None)
+GEOMETRIES = {
+    "flat": ("flat", None),
+    "infinite": ("queueing", QueueGeometry.flat_floor()),
+    "roomy": ("queueing", QueueGeometry(
+        dram_channels=8, dram_banks=16, nvm_channels=4, nvm_banks=16)),
+    "constrained": ("queueing", QueueGeometry(
+        dram_channels=1, dram_banks=2, nvm_channels=1, nvm_banks=2)),
+}
+
+
+def _scenarios():
+    if QUICK:
+        return ["syn/streamcluster", "syn/mcf"]
+    return ["syn/streamcluster", "syn/mcf", "syn/canneal", "syn/GUPS"]
+
+
+def _sweep_kwargs():
+    return ({"intervals": 4, "accesses": 20_000} if QUICK
+            else {"intervals": 7, "accesses": 50_000})
+
+
+def run():
+    t0 = time.time()
+    scenarios = _scenarios()
+    results = {}  # (geom_label, scenario, policy) -> SimMetrics
+    for label, (model, geom) in GEOMETRIES.items():
+        res = runner.sweep(
+            [], MIG_POLICIES, [7], scenarios=scenarios,
+            timing_model=model, queue_geometry=geom, **_sweep_kwargs(),
+        )
+        for (app, policy, _seed), m in res.items():
+            results[(label, app, policy)] = m
+
+    # flat-floor differential: flat must be BITWISE identical to infinite
+    floor_ok = all(
+        dataclasses.asdict(results[("flat", app, pol)])
+        == dataclasses.asdict(results[("infinite", app, pol)])
+        for app in scenarios for pol in MIG_POLICIES
+    )
+
+    rows = []
+    for (label, app, policy), m in sorted(results.items()):
+        rows.append({
+            "geometry": label,
+            "app": app,
+            "policy": policy,
+            "ipc": round(m.ipc, 6),
+            "total_cycles": round(m.total_cycles, 1),
+            "bank_stall_cycles": round(m.bank_stall_cycles, 1),
+            "mig_stall_cycles": round(m.mig_stall_cycles, 1),
+            "queue_occ_dram": round(m.queue_occupancy_dram, 1),
+            "queue_occ_nvm": round(m.queue_occupancy_nvm, 1),
+        })
+
+    def gap(label):  # mean rainbow-over-hscc-2mb IPC ratio at one geometry
+        ratios = [
+            results[(label, app, "rainbow")].ipc
+            / results[(label, app, "hscc-2mb-mig")].ipc
+            for app in scenarios
+        ]
+        return sum(ratios) / len(ratios)
+
+    gap_flat, gap_constrained = gap("flat"), gap("constrained")
+    shift = gap_constrained / gap_flat
+    headline = (
+        f"flat-floor bitwise: {floor_ok}; rainbow/hscc-2mb IPC gap "
+        f"{gap_flat:.3f} (flat) -> {gap_constrained:.3f} (constrained), "
+        f"shift x{shift:.3f}"
+    )
+    write_bench_json("timing", {
+        "headline": headline,
+        "flat_floor_bitwise": floor_ok,
+        "gap_ipc_flat": gap_flat,
+        "gap_ipc_constrained": gap_constrained,
+        "gate": {"floor": 1.0, "speedup": shift},
+        "rows": rows,
+    })
+    emit("timing_contention", rows, t0, headline)
+    if not floor_ok:
+        raise AssertionError(
+            "flat != queueing-with-infinite-banks: the flat-floor invariant "
+            "is broken (see docs/timing.md)"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

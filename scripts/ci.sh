@@ -168,6 +168,51 @@ print(f"  engine gate: {POLICY} fastpath {gate['speedup']:.2f}x reference "
       f"(floor {GATE_FLOOR}x), profile phases: {sorted(phases)}")
 EOF
 
+echo "== timing smoke: flat == queueing-with-infinite-banks (bitwise) + contention sanity =="
+python - <<'EOF'
+import dataclasses
+
+from repro.sim.runner import simulate
+from repro.timing import QueueGeometry
+
+for policy in ("rainbow", "hscc-4kb-mig"):
+    flat = simulate("streamcluster", policy, intervals=2, accesses=4000)
+    inf = simulate("streamcluster", policy, intervals=2, accesses=4000,
+                   timing_model="queueing",
+                   queue_geometry=QueueGeometry.flat_floor())
+    assert dataclasses.asdict(flat) == dataclasses.asdict(inf), (
+        f"{policy}: flat != queueing-with-infinite-banks (bitwise)")
+    tight = simulate("streamcluster", policy, intervals=2, accesses=4000,
+                     timing_model="queueing",
+                     queue_geometry=QueueGeometry(1, 2, 1, 2))
+    assert tight.bank_stall_cycles > 0, policy
+    assert tight.total_cycles > flat.total_cycles, policy
+    print(f"  {policy:12s} flat-floor bitwise OK, constrained "
+          f"bank_stall={tight.bank_stall_cycles:.3e}")
+print("timing smoke OK")
+EOF
+
+echo "== timing contention: bank-geometry x policy sweep + BENCH_timing.json schema =="
+python -m benchmarks.timing_contention
+python - <<'EOF'
+import json
+
+bench = json.load(open("BENCH_timing.json"))
+for key in ("benchmark", "quick", "headline", "rows", "flat_floor_bitwise",
+            "gap_ipc_flat", "gap_ipc_constrained", "gate"):
+    assert key in bench, f"BENCH_timing.json missing {key!r}"
+assert bench["flat_floor_bitwise"] is True, "flat-floor invariant broken"
+gate = bench["gate"]
+assert {"floor", "speedup"} <= set(gate)
+assert gate["speedup"] >= gate["floor"], (
+    f"policy-gap shift below floor: {gate['speedup']} < {gate['floor']}")
+for row in bench["rows"]:
+    assert {"geometry", "app", "policy", "ipc", "total_cycles",
+            "bank_stall_cycles", "mig_stall_cycles", "queue_occ_dram",
+            "queue_occ_nvm"} <= set(row), row
+print(f"  timing gate: {bench['headline']}")
+EOF
+
 echo "== hscc parity: STREAMED fleet vs recorded snapshot (spot check, rel-err 0.0) =="
 python scripts/validate_hscc_parity.py --stream --apps soplex
 echo "  (full table: scripts/validate_hscc_parity.py [--stream])"

@@ -29,9 +29,41 @@ class TimingParams:
     t_writeback: jax.Array  # cycles to write a dirty DRAM page back to NVM
 
 
+def _check_latency(name: str, value, *, positive: bool) -> None:
+    """Reject malformed timing constants loudly at construction.
+
+    Only concrete host scalars are checked (traced values pass through —
+    every production caller builds TimingParams from python floats, outside
+    any trace).
+    """
+    try:
+        v = float(value)
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"timing parameter {name} must be a real number, got {value!r}"
+        ) from None
+    if v != v or v in (float("inf"), float("-inf")):
+        raise ValueError(f"timing parameter {name} must be finite, got {v!r}")
+    if positive and v <= 0:
+        raise ValueError(
+            f"timing parameter {name} must be positive, got {v!r}"
+        )
+    if not positive and v < 0:
+        raise ValueError(
+            f"timing parameter {name} must be non-negative, got {v!r}"
+        )
+
+
 def make_timing(
     t_nr: float, t_nw: float, t_dr: float, t_dw: float, t_mig: float, t_writeback: float
 ) -> TimingParams:
+    for name, value in (("t_nr", t_nr), ("t_nw", t_nw),
+                        ("t_dr", t_dr), ("t_dw", t_dw)):
+        if not isinstance(value, jax.core.Tracer):
+            _check_latency(name, value, positive=True)
+    for name, value in (("t_mig", t_mig), ("t_writeback", t_writeback)):
+        if not isinstance(value, jax.core.Tracer):
+            _check_latency(name, value, positive=False)
     f = lambda x: jnp.asarray(x, jnp.float32)
     return TimingParams(f(t_nr), f(t_nw), f(t_dr), f(t_dw), f(t_mig), f(t_writeback))
 
@@ -72,15 +104,47 @@ TIMING_PRESETS: dict[str, dict[str, float]] = {
 }
 
 
+_PRESET_KEYS = frozenset(
+    {"t_nr", "t_nw", "t_dr", "t_dw", "t_mig", "t_writeback"}
+)
+
+
+def _validate_preset(name: str, entry) -> None:
+    """Malformed preset dicts fail HERE with the preset named, not deep in
+    the cost model (a bad entry used to flow silently into every latency)."""
+    if not isinstance(entry, dict):
+        raise ValueError(
+            f"timing preset {name!r} must be a dict, got {type(entry).__name__}"
+        )
+    got = set(entry)
+    if got != _PRESET_KEYS:
+        missing, extra = sorted(_PRESET_KEYS - got), sorted(got - _PRESET_KEYS)
+        raise ValueError(
+            f"timing preset {name!r} has malformed keys "
+            f"(missing={missing}, unexpected={extra})"
+        )
+    for key in ("t_nr", "t_nw", "t_dr", "t_dw"):
+        _check_latency(f"{name}.{key}", entry[key], positive=True)
+    for key in ("t_mig", "t_writeback"):
+        _check_latency(f"{name}.{key}", entry[key], positive=False)
+
+
 def preset_timing(name: str) -> TimingParams:
     """TimingParams for a named hardware preset (see TIMING_PRESETS)."""
     try:
-        return make_timing(**TIMING_PRESETS[name])
+        entry = TIMING_PRESETS[name]
     except KeyError:
         raise KeyError(
             f"unknown timing preset {name!r}; "
             f"available: {sorted(TIMING_PRESETS)}"
         ) from None
+    _validate_preset(name, entry)
+    return make_timing(**entry)
+
+
+for _name, _entry in TIMING_PRESETS.items():  # built-ins checked at import
+    _validate_preset(_name, _entry)
+del _name, _entry
 
 
 def migration_benefit(c_r: jax.Array, c_w: jax.Array, t: TimingParams) -> jax.Array:

@@ -105,6 +105,8 @@ class SweepCell:
     control: ControlPolicy | None = None
     fused: bool = False
     tags: Tags = ()
+    timing_model: str = "flat"
+    queue_geometry: Any = None  # repro.timing.QueueGeometry | None
 
     @property
     def tag(self) -> dict[str, Any]:
@@ -123,7 +125,8 @@ class SweepCell:
         """
         blob = repr((self.app, self.policy, self.seed, self.mc,
                      self.intervals, self.accesses, self.counter_backend,
-                     self.control, self.fused, self.tags))
+                     self.control, self.fused, self.tags,
+                     self.timing_model, self.queue_geometry))
         return f"{self.label}#{hashlib.sha1(blob.encode()).hexdigest()[:10]}"
 
 
@@ -146,6 +149,8 @@ class SweepPlan:
         policy: ControlPolicy | str | None = None,
         scenario=None,
         tags: Tags = (),
+        timing_model: str = "flat",
+        queue_geometry=None,
     ) -> "SweepPlan":
         """The dense (apps x policies x seeds) grid at one machine config.
 
@@ -210,7 +215,9 @@ class SweepPlan:
             )
         return SweepPlan(tuple(
             SweepCell(a, p, s, mc, intervals, accesses, counter_backend,
-                      control, fused, tuple(tags))
+                      control, fused, tuple(tags),
+                      timing_model=timing_model,
+                      queue_geometry=queue_geometry)
             for a, fused in workloads for p in policies for s in seeds
         ))
 
@@ -273,6 +280,8 @@ def plan_groups(plan: SweepPlan) -> list[FleetGroup]:
                 simloop.TraceSource(cell.app, cell.accesses)
                 if cell.fused else None
             ),
+            timing_model=cell.timing_model,
+            queue_geometry=cell.queue_geometry,
         )
         key = (spec, cell.intervals, meta["accesses_per_interval"],
                meta["inst_per_access"])

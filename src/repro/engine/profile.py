@@ -17,6 +17,8 @@ Phases (per-policy anatomy; see docs/engine.md):
            HSCC ports: the whole fixed-shape utility-admission program
   apply    rainbow: monitor rotation + controller-state commit + shootdowns;
            HSCC 4K: shootdowns
+  queue    timing_model="queueing" only: the per-channel/bank contention
+           charge (repro.timing.interval_step)
 
 The first call of each phase compiles; that wall time is reported separately
 as `compile_s` so `wall_s` stays a clean per-interval execution cost (with a
@@ -33,6 +35,7 @@ import jax.numpy as jnp
 
 from repro.core import rainbow as rb
 from repro.sim.policies import machine_timing
+from repro.timing import queueing as qtiming
 
 
 @dataclasses.dataclass
@@ -175,6 +178,25 @@ def run_profiled(spec, state, chunks, *, seed=None, intervals: int | None = None
             "plan", lambda pol, ch: simloop._hscc2m_migrate(spec, pol, ch)
         )
 
+    geom = spec.timing_geometry()
+    if geom is not None:
+        def _queue(st, ch, stats):
+            in_dram = simloop._residency(spec, st, ch)
+            q, tm = qtiming.interval_step(
+                geom, spec.mc, policy, st.q,
+                ch.vpn, ch.is_write, in_dram, st.sim.t,
+                stats.migrations, stats.evictions, stats.dirty_evictions,
+            )
+            return q, stats._replace(
+                stall_dram=tm.stall_dram,
+                stall_nvm=tm.stall_nvm,
+                mig_stall=tm.mig_stall,
+                backlog_dram=tm.backlog_dram,
+                backlog_nvm=tm.backlog_nvm,
+            )
+
+        p_queue = phase("queue", _queue)
+
     if fused:
         t0 = time.perf_counter()
         aux = setup(seed)
@@ -199,7 +221,12 @@ def run_profiled(spec, state, chunks, *, seed=None, intervals: int | None = None
             pol, stats, _ = p_plan(state.pol, chunk)
         else:
             pol, stats = state.pol, simloop._zero_stats()
-        state = simloop.EngineState(sim=sim, pol=pol)
+        q = state.q
+        if geom is not None:
+            # consumes PRE-interval state (residency + access clock), like
+            # the in-scan engine_step
+            q, stats = p_queue(state, chunk, stats)
+        state = simloop.EngineState(sim=sim, pol=pol, q=q)
         stats_per_interval.append(stats)
 
     stats = jax.tree.map(lambda *xs: jnp.stack(xs), *stats_per_interval)

@@ -44,6 +44,8 @@ from repro.sim import tlbsim
 from repro.sim import trace as trace_mod
 from repro.sim.config import PAGES_PER_SP, MachineConfig
 from repro.sim.policies import machine_timing
+from repro.timing import QueueGeometry
+from repro.timing import queueing as qtiming
 from repro.utils import pytree_dataclass, static_field
 
 #: TranslationKind used by the per-access scan, per policy (§IV-A table).
@@ -101,12 +103,32 @@ class EngineSpec:
     # the subprocess-isolated speedup baseline and as the differential anchor
     # for tests (tests/test_hotpath.py, tests/test_engine.py).
     fastpath: bool = True
+    # timing_model="queueing" carries per-tier per-server avail_cycle clocks
+    # (repro.timing) in the scan state and fills the contention fields of
+    # IntervalStats; "flat" (default) keeps the event-count cost model and a
+    # None queue carry. The two are bit-identical when queue_geometry is the
+    # infinite flat floor (tests/test_timing.py).
+    timing_model: str = "flat"
+    queue_geometry: QueueGeometry | None = None
 
     def control_policy(self) -> ControlPolicy:
         """The effective ControlPolicy of this compile (stateful policies)."""
         return sim_policy_for(
             self.policy, self.mc, self.control, self.counter_backend
         )
+
+    def timing_geometry(self) -> QueueGeometry | None:
+        """The effective QueueGeometry (validated), or None under "flat"."""
+        if self.timing_model == "flat":
+            return None
+        if self.timing_model != "queueing":
+            raise ValueError(
+                f"EngineSpec.timing_model must be 'flat' or 'queueing', "
+                f"got {self.timing_model!r}"
+            )
+        geom = self.queue_geometry or QueueGeometry()
+        geom.validate()
+        return geom
 
 
 class TraceChunks(NamedTuple):
@@ -136,20 +158,30 @@ class HsccPolicyState:
 class EngineState:
     sim: tlbsim.SimState
     pol: Any  # policy-program state (structure is static per EngineSpec)
+    q: Any = None  # timing.QueueState under timing_model="queueing"
 
 
 class IntervalStats(NamedTuple):
-    """Per-interval migration activity (host finalize derives bytes/cycles)."""
+    """Per-interval migration activity (host finalize derives bytes/cycles)
+    plus the queueing model's contention metrics — f32 scalars that are
+    EXACT zeros under timing_model="flat" AND under the infinite-bank floor,
+    so the flat floor holds bitwise through every accumulation."""
 
     migrations: jax.Array  # int32
     evictions: jax.Array  # int32
     dirty_evictions: jax.Array  # int32
     shootdowns: jax.Array  # int32
+    stall_dram: jax.Array  # f32: demand bank-conflict wait cycles, DRAM tier
+    stall_nvm: jax.Array  # f32: demand bank-conflict wait cycles, NVM tier
+    mig_stall: jax.Array  # f32: stall attributable to migration traffic
+    backlog_dram: jax.Array  # f32: queue depth past interval end (cycles)
+    backlog_nvm: jax.Array  # f32
 
 
 def _zero_stats() -> IntervalStats:
     z = jnp.zeros((), jnp.int32)
-    return IntervalStats(z, z, z, z)
+    f = jnp.zeros((), jnp.float32)
+    return IntervalStats(z, z, z, z, f, f, f, f, f)
 
 
 # ---------------------------------------------------------------------------
@@ -368,7 +400,9 @@ def engine_init(spec: EngineSpec) -> EngineState:
         )
     else:  # flat-static / dram-only: state-free
         pol = None
-    return EngineState(sim=sim, pol=pol)
+    geom = spec.timing_geometry()
+    q = qtiming.queue_init(geom) if geom is not None else None
+    return EngineState(sim=sim, pol=pol, q=q)
 
 
 def _rainbow_finish(spec: EngineSpec, rep) -> tuple[IntervalStats, jax.Array]:
@@ -378,7 +412,7 @@ def _rainbow_finish(spec: EngineSpec, rep) -> tuple[IntervalStats, jax.Array]:
     ev_valid = rep.plan.evict_sp >= 0
     ev_vpn = rep.plan.evict_sp * PAGES_PER_SP + rep.plan.evict_page
     inval = _first_k_valid(ev_vpn, ev_valid, spec.max_invalidate, spec.fastpath)
-    stats = IntervalStats(
+    stats = _zero_stats()._replace(
         migrations=rep.n_migrated,
         evictions=rep.n_evicted,
         dirty_evictions=rep.n_dirty_evicted,
@@ -451,7 +485,7 @@ def _hscc_admit(
     dirty = dirty.at[jnp.where(ok2, vic, n)].set(False, mode="drop")
 
     n_swap = ok2.sum().astype(jnp.int32)
-    stats = IntervalStats(
+    stats = _zero_stats()._replace(
         migrations=n_free + n_swap,
         evictions=n_swap,
         dirty_evictions=dirty_ev,
@@ -537,6 +571,7 @@ def engine_step(
     """One interval, device-resident: residency -> access scan -> migrate."""
     policy = spec.policy
     in_dram = _residency(spec, state, chunk)
+    t0 = state.sim.t  # access clock BEFORE this interval's walk
     sim = _access_scan(spec, state.sim, chunk, in_dram)
 
     inval = None
@@ -550,7 +585,22 @@ def engine_step(
         pol, stats = state.pol, _zero_stats()
     if inval is not None:
         sim = _invalidate_4k(sim, inval, spec.fastpath)
-    return EngineState(sim=sim, pol=pol), stats
+    q = state.q
+    geom = spec.timing_geometry()
+    if geom is not None:
+        q, tm = qtiming.interval_step(
+            geom, spec.mc, policy, state.q,
+            chunk.vpn, chunk.is_write, in_dram, t0,
+            stats.migrations, stats.evictions, stats.dirty_evictions,
+        )
+        stats = stats._replace(
+            stall_dram=tm.stall_dram,
+            stall_nvm=tm.stall_nvm,
+            mig_stall=tm.mig_stall,
+            backlog_dram=tm.backlog_dram,
+            backlog_nvm=tm.backlog_nvm,
+        )
+    return EngineState(sim=sim, pol=pol, q=q), stats
 
 
 @functools.partial(jax.jit, static_argnames=("spec",))
@@ -809,6 +859,8 @@ def sweep_seeds(
     intervals: int = 5,
     accesses: int | None = None,
     counter_backend: str = "jax",
+    timing_model: str = "flat",
+    queue_geometry=None,
 ) -> tuple[EngineState, IntervalStats, dict]:
     """Run one (app, policy) across a seed fleet in a single batched compile.
 
@@ -827,6 +879,8 @@ def sweep_seeds(
         num_superpages=meta0["num_superpages"],
         footprint_pages=meta0["footprint_pages"],
         counter_backend=counter_backend,
+        timing_model=timing_model,
+        queue_geometry=queue_geometry,
     )
     state0 = engine_init(spec)
     states = jax.tree.map(

@@ -28,6 +28,7 @@ from repro.engine.policy import sim_policy_for
 from repro.sim import tlbsim
 from repro.sim.config import PAGES_PER_SP, MachineConfig
 from repro.sim.trace import Trace
+from repro.timing import queueing as qtiming
 from repro.utils.select import first_k_valid
 
 
@@ -51,6 +52,12 @@ class IntervalResult:
     mig_cycles: float = 0.0
     shootdown_cycles: float = 0.0
     clflush_cycles: float = 0.0
+    # queueing timing model (repro.timing); stay 0.0 under timing_model="flat"
+    stall_dram: float = 0.0
+    stall_nvm: float = 0.0
+    mig_stall: float = 0.0
+    backlog_dram: float = 0.0
+    backlog_nvm: float = 0.0
 
 
 def interval_costs(
@@ -105,12 +112,33 @@ class Policy:
     name = "base"
     kind = "flat4k"
 
-    def __init__(self, mc: MachineConfig, trace0: Trace, seed: int = 0):
+    def __init__(
+        self,
+        mc: MachineConfig,
+        trace0: Trace,
+        seed: int = 0,
+        timing_model: str = "flat",
+        queue_geometry=None,
+    ):
         self.mc = mc
         self.sim = tlbsim.init_state(mc)
         self.timing = machine_timing(mc)
         self.num_sp = trace0.num_superpages
         self.fp_pages = trace0.footprint_pages
+        # queueing timing model: mirror EngineSpec.timing_geometry()
+        if timing_model == "flat":
+            self._geom = None
+        elif timing_model == "queueing":
+            self._geom = queue_geometry or qtiming.QueueGeometry()
+            self._geom.validate()
+        else:
+            raise ValueError(
+                f"timing_model must be 'flat' or 'queueing', "
+                f"got {timing_model!r}"
+            )
+        self._q = (
+            qtiming.queue_init(self._geom) if self._geom is not None else None
+        )
 
     def residency(self, trace: Trace) -> jax.Array:
         raise NotImplementedError
@@ -121,6 +149,7 @@ class Policy:
     def run_interval(self, trace: Trace) -> IntervalResult:
         in_dram = self.residency(trace)
         before = self.sim.counters
+        t_before = self.sim.t  # access clock BEFORE this interval's walk
         self.sim = tlbsim.run_interval(
             self.kind,
             self.mc,
@@ -133,6 +162,23 @@ class Policy:
         delta = jax.tree.map(lambda a, b: a - b, self.sim.counters, before)
         res = self.migrate(trace, np.asarray(in_dram))
         res.counters = delta
+        if self._geom is not None:
+            # the SAME jitted program the engine scan inlines per interval
+            self._q, tm = qtiming.interval_step_jit(
+                self._geom, self.mc, self.name, self._q,
+                jnp.asarray(trace.vpn.astype(np.int32)),
+                jnp.asarray(trace.is_write),
+                jnp.asarray(in_dram),
+                t_before,
+                jnp.int32(res.migrations),
+                jnp.int32(res.evictions),
+                jnp.int32(res.dirty_evictions),
+            )
+            res.stall_dram = float(tm.stall_dram)
+            res.stall_nvm = float(tm.stall_nvm)
+            res.mig_stall = float(tm.mig_stall)
+            res.backlog_dram = float(tm.backlog_dram)
+            res.backlog_nvm = float(tm.backlog_nvm)
         return res
 
     def _invalidate_4k(self, vpns: np.ndarray) -> None:
@@ -182,8 +228,8 @@ class Rainbow(Policy):
     name = "rainbow"
     kind = "rainbow"
 
-    def __init__(self, mc, trace0, seed=0):
-        super().__init__(mc, trace0, seed)
+    def __init__(self, mc, trace0, seed=0, **kw):
+        super().__init__(mc, trace0, seed, **kw)
         # the controller knobs come from the registered "sim-rainbow" preset —
         # the same ControlPolicy surface the engine, fleet sweeps, and the
         # serving autotuner consume (no duplicated knob definitions)

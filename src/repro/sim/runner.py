@@ -35,6 +35,9 @@ _ZERO_TOTALS = {
     "migrations": 0, "evictions": 0, "dirty": 0, "shootdowns": 0,
     "mig_bytes": 0.0, "mig_cycles": 0.0, "shootdown_cycles": 0.0,
     "clflush_cycles": 0.0, "accesses": 0,
+    # queueing timing model (repro.timing); exact 0.0 under timing_model="flat"
+    "stall_dram": 0.0, "stall_nvm": 0.0, "mig_stall": 0.0,
+    "backlog_dram": 0.0, "backlog_nvm": 0.0, "intervals": 0,
 }
 
 
@@ -56,6 +59,13 @@ class SimMetrics:
     footprint_bytes: float
     traffic_ratio: float
     energy: dict[str, float]
+    # queueing timing model (EngineSpec.timing_model="queueing"); trailing
+    # with defaults so journaled SimMetrics(**fields) round-trips from before
+    # the timing subsystem existed. All exact 0.0 under "flat".
+    bank_stall_cycles: float = 0.0
+    mig_stall_cycles: float = 0.0
+    queue_occupancy_dram: float = 0.0
+    queue_occupancy_nvm: float = 0.0
 
     def row(self) -> dict[str, Any]:
         d = dataclasses.asdict(self)
@@ -80,6 +90,7 @@ def finalize_metrics(
         f(c.cycles_tlb) + f(c.cycles_walk) + f(c.cycles_bitmap) + f(c.cycles_remap)
     )
     instructions = totals["accesses"] * inst_per_access
+    bank_stall = totals["stall_dram"] + totals["stall_nvm"]
     total_cycles = (
         instructions * BASE_CPI
         + cycles_trans
@@ -87,6 +98,7 @@ def finalize_metrics(
         + totals["mig_cycles"]
         + totals["shootdown_cycles"]
         + totals["clflush_cycles"]
+        + bank_stall  # exact 0.0 under "flat": total_cycles bitwise unchanged
     )
     # the TLB miss count that matters for MPKI: walks actually taken
     if policy in ("flat-static", "hscc-4kb-mig"):
@@ -122,6 +134,7 @@ def finalize_metrics(
             "cycles_mig": totals["mig_cycles"],
             "cycles_shootdown": totals["shootdown_cycles"],
             "cycles_clflush": totals["clflush_cycles"],
+            "cycles_bank_stall": bank_stall,
             "bmc_misses": f(c.bmc_miss),
         },
         migrations=totals["migrations"],
@@ -131,6 +144,10 @@ def finalize_metrics(
         footprint_bytes=fp_bytes,
         traffic_ratio=totals["mig_bytes"] / fp_bytes,
         energy=energy,
+        bank_stall_cycles=bank_stall,
+        mig_stall_cycles=totals["mig_stall"],
+        queue_occupancy_dram=totals["backlog_dram"] / max(totals["intervals"], 1),
+        queue_occupancy_nvm=totals["backlog_nvm"] / max(totals["intervals"], 1),
     )
 
 
@@ -143,7 +160,15 @@ def totals_from_stats(
     e_i = np.asarray(stats.evictions)
     d_i = np.asarray(stats.dirty_evictions)
     s_i = np.asarray(stats.shootdowns)
-    for m, e, d, s in zip(m_i.tolist(), e_i.tolist(), d_i.tolist(), s_i.tolist()):
+    cols = zip(
+        m_i.tolist(), e_i.tolist(), d_i.tolist(), s_i.tolist(),
+        np.asarray(stats.stall_dram).tolist(),
+        np.asarray(stats.stall_nvm).tolist(),
+        np.asarray(stats.mig_stall).tolist(),
+        np.asarray(stats.backlog_dram).tolist(),
+        np.asarray(stats.backlog_nvm).tolist(),
+    )
+    for m, e, d, s, sd, sn, ms, bd, bn in cols:
         costs = interval_costs(policy, mc, m, e, d, s)
         totals["migrations"] += m
         totals["evictions"] += e
@@ -154,6 +179,12 @@ def totals_from_stats(
         totals["shootdown_cycles"] += costs["shootdown_cycles"]
         totals["clflush_cycles"] += costs["clflush_cycles"]
         totals["accesses"] += accesses_per_interval
+        totals["stall_dram"] += sd
+        totals["stall_nvm"] += sn
+        totals["mig_stall"] += ms
+        totals["backlog_dram"] += bd
+        totals["backlog_nvm"] += bn
+        totals["intervals"] += 1
     return totals
 
 
@@ -168,6 +199,8 @@ def simulate(
     counter_backend: str = "jax",
     fused: bool = False,
     fastpath: bool = True,
+    timing_model: str = "flat",
+    queue_geometry=None,
 ) -> SimMetrics:
     """Simulate (app x policy) over N intervals and aggregate SimMetrics.
 
@@ -178,11 +211,19 @@ def simulate(
     gate (tests/test_workloads.py). `fastpath=False` compiles the engine
     against the pre-overhaul reference ops (EngineSpec.fastpath) — the
     differential anchor for the vectorized hot path.
+
+    `timing_model="queueing"` (+ an optional repro.timing.QueueGeometry)
+    charges every interval through the per-channel/bank contention model
+    (docs/timing.md); "flat" keeps the event-count cost model bit-identical
+    to queueing-with-infinite-banks.
     """
     if not engine:
         if fused:
             raise ValueError("fused generation requires the engine path")
-        return simulate_eager(app, policy, mc, intervals, accesses, seed)
+        return simulate_eager(
+            app, policy, mc, intervals, accesses, seed,
+            timing_model=timing_model, queue_geometry=queue_geometry,
+        )
     from repro.engine import simloop  # lazy: sim.__init__ imports this module
 
     mc = mc or MachineConfig()
@@ -211,6 +252,8 @@ def simulate(
         counter_backend=counter_backend,
         source=source,
         fastpath=fastpath,
+        timing_model=timing_model,
+        queue_geometry=queue_geometry,
     )
     # The freshly built engine_init state is never reused, so its buffers are
     # donated to the scan — the carry updates in place instead of copying.
@@ -236,6 +279,8 @@ def simulate_eager(
     intervals: int = 5,
     accesses: int | None = None,
     seed: int = 7,
+    timing_model: str = "flat",
+    queue_geometry=None,
 ) -> SimMetrics:
     """Pre-refactor host-looped reference path (one round-trip per interval)."""
     if policy not in POLICY_CLASSES:
@@ -246,7 +291,10 @@ def simulate_eager(
         )
     mc = mc or MachineConfig()
     trace0 = trace_mod.generate(app, seed, 0, accesses)
-    pol = POLICY_CLASSES[policy](mc, trace0, seed)
+    pol = POLICY_CLASSES[policy](
+        mc, trace0, seed,
+        timing_model=timing_model, queue_geometry=queue_geometry,
+    )
 
     totals = dict(_ZERO_TOTALS)
     tr = trace0
@@ -263,6 +311,12 @@ def simulate_eager(
         totals["shootdown_cycles"] += res.shootdown_cycles
         totals["clflush_cycles"] += res.clflush_cycles
         totals["accesses"] += tr.sp.shape[0]
+        totals["stall_dram"] += res.stall_dram
+        totals["stall_nvm"] += res.stall_nvm
+        totals["mig_stall"] += res.mig_stall
+        totals["backlog_dram"] += res.backlog_dram
+        totals["backlog_nvm"] += res.backlog_nvm
+        totals["intervals"] += 1
 
     return finalize_metrics(
         app, policy, mc, totals, pol.sim.counters,
@@ -282,6 +336,8 @@ def sweep(
     journal=None,
     scenarios: list[str] = (),
     runner=None,
+    timing_model: str = "flat",
+    queue_geometry=None,
 ) -> dict[tuple[str, str, int], SimMetrics]:
     """Fleet sweep: the (app x policy x seed) grid as ONE FleetRunner plan.
 
@@ -308,6 +364,7 @@ def sweep(
         apps, policies, tuple(seeds), mc=mc or MachineConfig(),
         intervals=intervals, accesses=accesses,
         counter_backend=counter_backend, scenario=tuple(scenarios),
+        timing_model=timing_model, queue_geometry=queue_geometry,
     )
     runner = runner or fleet.FleetRunner()
     result = runner.run(plan, stream=stream, journal=journal)

@@ -1,0 +1,37 @@
+"""Queueing-fidelity timing subsystem: per-channel/bank contention model.
+
+See docs/timing.md. The engine selects it via EngineSpec.timing_model
+("flat" keeps the event-count cost model; "queueing" carries per-tier
+per-server avail_cycle clocks in the scan state). The flat floor invariant —
+flat == queueing with infinite banks, bitwise — is the differential anchor
+every existing figure keeps.
+"""
+from repro.timing.queueing import (
+    MIGRATING_POLICIES,
+    IntervalTiming,
+    QueueGeometry,
+    QueueState,
+    bulk_charge,
+    charge_queues,
+    charged_service_cycles,
+    interval_step,
+    interval_step_jit,
+    queue_init,
+    zero_timing,
+)
+from repro.timing.traffic import migration_cycles
+
+__all__ = [
+    "MIGRATING_POLICIES",
+    "IntervalTiming",
+    "QueueGeometry",
+    "QueueState",
+    "bulk_charge",
+    "charge_queues",
+    "charged_service_cycles",
+    "interval_step",
+    "interval_step_jit",
+    "migration_cycles",
+    "queue_init",
+    "zero_timing",
+]

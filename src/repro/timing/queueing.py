@@ -1,0 +1,317 @@
+"""Per-channel/bank queueing timing: contention as scan-carried state.
+
+The flat cost model (sim.policies.interval_costs) prices an interval as
+event-counts x latencies — no access ever waits for another. This module
+ports the tracehm `TimingObj.avail_cycle` idea device-side: each memory tier
+exposes `channels x banks` servers, every access is dispatched to the server
+`vpn % servers` of its tier, and a server busy until `avail_cycle` makes the
+access WAIT. Migration/eviction traffic is charged to the same queues at
+interval end, so background copies steal bandwidth from demand accesses —
+the effect lightweight migration is supposed to relieve, now visible.
+
+Design constraints (all load-bearing):
+
+  * every op is vectorized jnp (stable argsort + segmented max-plus
+    associative_scan + scatter) so the charge runs inside ``lax.scan``,
+    under vmap-over-seeds, and in the shard_map fleet unchanged;
+  * the FLAT FLOOR invariant: ``QueueGeometry.flat_floor()`` (infinite
+    banks) is an explicit exact-zero path — every access finds an idle
+    server, so stall/backlog contributions are literal ``0.0`` and
+    ``timing_model="flat"`` stays bit-identical to queueing-with-infinite-
+    banks (tests/test_timing.py sweeps every registered scenario x policy);
+  * the demand service vector reuses EXACTLY the hoisted per-access memory
+    cost of tlbsim.make_interval_runner (read/write x tier asymmetry), so
+    the queue model prices the same accesses the counters already count.
+
+Absolute queue clocks are f32: with issue_gap ~8 cycles and <= ~2M accesses
+per simulation the clock stays ~1.6e7, where the f32 ulp is ~1-2 cycles —
+fine for stall ESTIMATES, and irrelevant to the flat floor (exact zeros).
+
+No repro.sim imports here (sim.__init__ -> runner -> policies -> engine ->
+timing would cycle): MachineConfig is consumed duck-typed via its latency
+attributes, and PAGES_PER_SP is kept literal in traffic.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.timing import traffic
+
+#: Policies whose step programs emit migration traffic (everything else
+#: charges zero bulk cycles, so the no-migration counterfactual chain is
+#: skipped and mig_stall is an exact 0.0).
+MIGRATING_POLICIES = ("rainbow", "hscc-4kb-mig", "hscc-2mb-mig")
+
+
+@dataclasses.dataclass(frozen=True)
+class QueueGeometry:
+    """Channel/bank geometry of both tiers (hashable; part of EngineSpec).
+
+    ``servers = channels * banks`` independent FIFO queues per tier; accesses
+    map to servers by ``vpn % servers`` (address-interleaved striping).
+    ``issue_gap`` is the mean core-side issue spacing in cycles — arrivals of
+    interval access i land at ``(t + i) * issue_gap`` where t is the running
+    access clock, so queues drain (or back up) across interval boundaries.
+
+    ``infinite=True`` (``flat_floor()``) models one idle server per access:
+    no queueing ever, all contention metrics exactly 0.0 — the differential
+    floor that keeps every flat-model figure unchanged.
+    """
+
+    dram_channels: int = 4
+    dram_banks: int = 16
+    nvm_channels: int = 2
+    nvm_banks: int = 8
+    issue_gap: float = 8.0
+    infinite: bool = False
+
+    def validate(self) -> None:
+        for name in ("dram_channels", "dram_banks", "nvm_channels",
+                     "nvm_banks"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or v < 1:
+                raise ValueError(
+                    f"QueueGeometry.{name} must be a positive int, got {v!r}"
+                )
+        gap = self.issue_gap
+        if not (isinstance(gap, (int, float)) and gap == gap and gap > 0):
+            raise ValueError(
+                f"QueueGeometry.issue_gap must be a positive finite number, "
+                f"got {gap!r}"
+            )
+
+    @property
+    def dram_servers(self) -> int:
+        return self.dram_channels * self.dram_banks
+
+    @property
+    def nvm_servers(self) -> int:
+        return self.nvm_channels * self.nvm_banks
+
+    @classmethod
+    def flat_floor(cls, issue_gap: float = 8.0) -> "QueueGeometry":
+        """Infinite banks: the geometry whose metrics == the flat model."""
+        return cls(issue_gap=issue_gap, infinite=True)
+
+
+class QueueState(NamedTuple):
+    """Scan-carried per-server ``avail_cycle`` clocks (f32, monotone).
+
+    ``*_nomig`` is the counterfactual chain charged with demand traffic only
+    (never the bulk migration charge) — the per-interval stall difference
+    between the chains is the migration-induced stall attribution. For
+    non-migrating policies (and the infinite floor) the chains are one and
+    the same arrays.
+    """
+
+    dram_avail: jax.Array  # f32[dram_servers]
+    nvm_avail: jax.Array  # f32[nvm_servers]
+    dram_nomig: jax.Array  # f32[dram_servers]
+    nvm_nomig: jax.Array  # f32[nvm_servers]
+
+
+class IntervalTiming(NamedTuple):
+    """One interval's contention metrics (f32 scalars; exact 0.0 on the
+    flat floor)."""
+
+    stall_dram: jax.Array  # demand bank-conflict wait cycles, DRAM tier
+    stall_nvm: jax.Array  # demand bank-conflict wait cycles, NVM tier
+    mig_stall: jax.Array  # stall attributable to migration traffic
+    backlog_dram: jax.Array  # queue depth past interval end (cycles)
+    backlog_nvm: jax.Array
+
+
+def queue_init(geom: QueueGeometry) -> QueueState:
+    """Idle queues (the infinite floor carries dummy length-1 clocks)."""
+    geom.validate()
+    if geom.infinite:
+        z = jnp.zeros((1,), jnp.float32)
+        return QueueState(z, z, z, z)
+    zd = jnp.zeros((geom.dram_servers,), jnp.float32)
+    zn = jnp.zeros((geom.nvm_servers,), jnp.float32)
+    return QueueState(zd, zn, jnp.zeros_like(zd), jnp.zeros_like(zn))
+
+
+def zero_timing() -> IntervalTiming:
+    z = jnp.zeros((), jnp.float32)
+    return IntervalTiming(z, z, z, z, z)
+
+
+def charge_queues(avail, sid, arrivals, service, active):
+    """FIFO-serve one tier's interval through its per-server queues.
+
+    Vectorized segmented max-plus recurrence: completion of access k on its
+    server is ``c_k = max(a_k, c_prev) + svc_k`` with the carried
+    ``avail[s]`` folded into each segment's first arrival. Implemented as a
+    stable argsort by server id (arrivals are already time-ordered, so each
+    segment keeps FIFO order), one ``lax.associative_scan`` over the affine
+    max-plus maps ``x -> max(x + svc, a_eff + svc)``, and a segment-last
+    scatter back into the avail vector.
+
+    Inactive lanes (accesses served by the OTHER tier) ride along on server 0
+    with zero service: arrivals are non-decreasing, so they are transparent
+    to every later completion and only ever advance avail[0] to an
+    already-past arrival time.
+
+    Returns ``(avail_new, stall_total)``; ``avail_new >= avail`` elementwise
+    and ``stall_total`` sums active lanes' ``completion - service - arrival``.
+    """
+    n_servers = avail.shape[0]
+    order = jnp.argsort(sid, stable=True)
+    s = sid[order]
+    a = arrivals[order]
+    svc = service[order]
+    act = active[order]
+
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), s[1:] != s[:-1]]
+    )
+    last = jnp.concatenate(
+        [s[1:] != s[:-1], jnp.ones((1,), bool)]
+    )
+    a_eff = jnp.where(first, jnp.maximum(a, avail[s]), a)
+
+    def combine(left, right):
+        p1, q1, f1 = left
+        p2, q2, f2 = right
+        return (
+            jnp.where(f2, p2, p1 + p2),
+            jnp.where(f2, q2, jnp.maximum(q1 + p2, q2)),
+            f1 | f2,
+        )
+
+    _, completion, _ = jax.lax.associative_scan(
+        combine, (svc, a_eff + svc, first)
+    )
+    stall = jnp.where(act, completion - svc - a, jnp.float32(0.0))
+    avail_new = avail.at[jnp.where(last, s, n_servers)].set(
+        completion, mode="drop"
+    )
+    return avail_new, jnp.sum(stall)
+
+
+def charged_service_cycles(sid, service, n_servers: int) -> jax.Array:
+    """Total service cycles charged per server (conservation diagnostic:
+    the vector permutes with any server relabeling; its sum is invariant)."""
+    return jnp.zeros((n_servers,), jnp.float32).at[sid].add(service)
+
+
+def bulk_charge(avail, cycles, t_end):
+    """Spread `cycles` of background traffic evenly over a tier's servers,
+    starting no earlier than the interval end it was planned at."""
+    n_servers = avail.shape[0]
+    return jnp.where(
+        cycles > 0,
+        jnp.maximum(avail, t_end) + cycles / jnp.float32(n_servers),
+        avail,
+    )
+
+
+def interval_step(
+    geom: QueueGeometry,
+    mc,
+    policy: str,
+    q: QueueState,
+    vpn,
+    is_write,
+    in_dram,
+    t0,
+    migrations,
+    evictions,
+    dirty,
+) -> tuple[QueueState, IntervalTiming]:
+    """Charge one interval's demand + migration traffic through the queues.
+
+    `mc` is duck-typed (t_dr/t_dw/t_nr/t_nw + the traffic-cost attributes);
+    `t0` is the running access clock BEFORE this interval's accesses (the
+    engine's SimState.t, int32); migrations/evictions/dirty are this
+    interval's counts (int32 scalars, traced or concrete).
+
+    The service vector is exactly the hoisted per-access mem_cost of
+    tlbsim.make_interval_runner: ``where(write, t_?w, t_?r)`` per tier.
+    """
+    if geom.infinite:
+        return q, zero_timing()
+
+    accesses = vpn.shape[0]
+    gap = jnp.float32(geom.issue_gap)
+    t0f = jnp.asarray(t0, jnp.int32).astype(jnp.float32)
+    arrivals = (t0f + jnp.arange(accesses, dtype=jnp.float32)) * gap
+    t_end = (t0f + jnp.float32(accesses)) * gap
+
+    vpn32 = jnp.asarray(vpn, jnp.int32)
+    wr = jnp.asarray(is_write)
+    dram = jnp.asarray(in_dram)
+    svc_dram = jnp.where(
+        dram,
+        jnp.where(wr, jnp.float32(mc.t_dw), jnp.float32(mc.t_dr)),
+        jnp.float32(0.0),
+    )
+    svc_nvm = jnp.where(
+        dram,
+        jnp.float32(0.0),
+        jnp.where(wr, jnp.float32(mc.t_nw), jnp.float32(mc.t_nr)),
+    )
+    sid_dram = jnp.where(dram, vpn32 % geom.dram_servers, 0)
+    sid_nvm = jnp.where(dram, 0, vpn32 % geom.nvm_servers)
+
+    d_avail, d_stall = charge_queues(
+        q.dram_avail, sid_dram, arrivals, svc_dram, dram
+    )
+    n_avail, n_stall = charge_queues(
+        q.nvm_avail, sid_nvm, arrivals, svc_nvm, ~dram
+    )
+
+    if policy in MIGRATING_POLICIES:
+        # counterfactual chain: demand only, never the bulk charge below
+        d_nomig, d_stall0 = charge_queues(
+            q.dram_nomig, sid_dram, arrivals, svc_dram, dram
+        )
+        n_nomig, n_stall0 = charge_queues(
+            q.nvm_nomig, sid_nvm, arrivals, svc_nvm, ~dram
+        )
+        dram_cycles, nvm_cycles = traffic.migration_cycles(
+            policy, mc, migrations, evictions, dirty
+        )
+        d_avail = bulk_charge(d_avail, dram_cycles, t_end)
+        n_avail = bulk_charge(n_avail, nvm_cycles, t_end)
+        mig_stall = jnp.maximum(
+            jnp.float32(0.0), (d_stall + n_stall) - (d_stall0 + n_stall0)
+        )
+    else:
+        # no bulk traffic ever: the actual chain IS the counterfactual
+        d_nomig, n_nomig = d_avail, n_avail
+        mig_stall = jnp.zeros((), jnp.float32)
+
+    backlog_dram = jnp.sum(jnp.maximum(d_avail - t_end, 0.0))
+    backlog_nvm = jnp.sum(jnp.maximum(n_avail - t_end, 0.0))
+    q_new = QueueState(d_avail, n_avail, d_nomig, n_nomig)
+    timing = IntervalTiming(
+        stall_dram=d_stall,
+        stall_nvm=n_stall,
+        mig_stall=mig_stall,
+        backlog_dram=backlog_dram,
+        backlog_nvm=backlog_nvm,
+    )
+    return q_new, timing
+
+
+@functools.partial(
+    jax.jit, static_argnames=("geom", "mc", "policy")
+)
+def interval_step_jit(
+    geom, mc, policy, q, vpn, is_write, in_dram, t0, migrations, evictions,
+    dirty,
+):
+    """Jitted interval_step: the eager oracle (sim.policies) dispatches the
+    SAME program per interval that the engine scan inlines, so the two paths
+    accumulate bit-identical per-interval stall floats."""
+    return interval_step(
+        geom, mc, policy, q, vpn, is_write, in_dram, t0, migrations,
+        evictions, dirty,
+    )

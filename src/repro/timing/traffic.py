@@ -1,0 +1,64 @@
+"""Per-tier migration traffic decomposition for the queueing timing model.
+
+sim.policies.interval_costs is THE flat cost model: per interval it prices
+migration activity as one `mig_cycles` scalar. The queueing model needs the
+same cycles SPLIT BY TIER so each half lands on the queues it actually
+occupies — a page copy reads one tier and writes the other, stealing
+bandwidth from demand accesses on both.
+
+Invariant (pinned by tests/test_timing.py): for every policy,
+
+    dram_cycles + nvm_cycles == interval_costs(...)["mig_cycles"]
+
+so the queueing model charges exactly the cycles the flat model already
+accounts for — no double counting, only a different placement. The split is
+half/half per transfer: each page move (either direction) and each dirty
+writeback busies the source tier's read port and the destination tier's
+write port for mig/writeback cost halves (the per-page constants already
+lump read+write — see core.migration._SIM_PAGE_COST's `* 2`).
+
+Kept free of repro.sim imports (engine -> timing must not cycle back through
+sim.__init__); `mc` is duck-typed and PAGES_PER_SP is literal, the same
+convention as workloads/generators.py.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+PAGES_PER_SP = 512  # == sim.config.PAGES_PER_SP (kept literal: no sim import)
+
+
+def migration_cycles(policy: str, mc, migrations, evictions, dirty):
+    """(dram_cycles, nvm_cycles) f32 scalars of one interval's migrations.
+
+    Mirrors sim.policies.interval_costs case by case:
+
+      flat-static / dram-only: no migration machinery at all -> (0, 0).
+      hscc-4kb / hscc-2mb: every moved unit (migrations + evictions) costs
+        mig_page_cost (x512 for superpages), dirty victims add a writeback;
+        each transfer splits half to either tier.
+      rainbow: only migrations pay the page copy and only dirty evictions
+        pay a writeback — clean evictions write back the 8-byte remap
+        pointer, which the flat model prices at zero cycles (§III-E), so
+        the queues see zero too.
+
+    migrations/evictions/dirty are int32 scalars (traced or concrete).
+    """
+    m = jnp.asarray(migrations, jnp.int32).astype(jnp.float32)
+    e = jnp.asarray(evictions, jnp.int32).astype(jnp.float32)
+    d = jnp.asarray(dirty, jnp.int32).astype(jnp.float32)
+    if policy in ("hscc-4kb-mig", "hscc-2mb-mig"):
+        scale = PAGES_PER_SP if policy == "hscc-2mb-mig" else 1
+        half_mig = jnp.float32(mc.mig_page_cost * scale / 2.0)
+        half_wb = jnp.float32(mc.writeback_page_cost * scale / 2.0)
+        per_tier = (m + e) * half_mig + d * half_wb
+        return per_tier, per_tier
+    if policy == "rainbow":
+        half_mig = jnp.float32(mc.mig_page_cost / 2.0)
+        half_wb = jnp.float32(mc.writeback_page_cost / 2.0)
+        per_tier = m * half_mig + d * half_wb
+        return per_tier, per_tier
+    if policy in ("flat-static", "dram-only"):
+        z = jnp.zeros((), jnp.float32)
+        return z, z
+    raise KeyError(f"unknown policy {policy!r}")

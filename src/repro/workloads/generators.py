@@ -49,6 +49,10 @@ _SALT_COLD = 11
 _SALT_SHUFFLE = 13
 _SALT_WRITE = 17
 _SALT_CHASE = 19
+_SALT_BUCKET = 23
+_SALT_COUNT = 29
+_SALT_RANK = 31
+_SALT_TIE = 37
 
 # Numerical Recipes LCG (mod 2^32): the pointer-chase hash chain
 _LCG_A = np.uint32(1664525)
@@ -117,6 +121,16 @@ class ZipfHotspot:
     A seed-fixed random subset of ``hot_frac * footprint`` pages receives
     ``hot_traffic`` of all references, zipf(alpha)-skewed by a stable rank
     order; the rest is uniform background over the footprint.
+
+    ``sp_hot_buckets`` (optional) shapes HOW the hot set clusters across
+    superpages — the paper's Table II statistic. Each ``(weight, lo, hi)``
+    bucket says: with probability proportional to ``weight``, a superpage
+    hosts between ``lo`` and ``hi`` hot pages (bounds in scaled pages,
+    inclusive). Setup samples a bucket per superpage off a host-precomputed
+    CDF, draws a per-superpage quota, and fills quotas with a vectorized
+    rank sort — setup runs once per simulation, outside the scan, so a sort
+    is allowed here (unlike emit). The empty default keeps the original
+    uniform placement bit-for-bit.
     """
 
     footprint_pages: int
@@ -125,6 +139,7 @@ class ZipfHotspot:
     zipf_alpha: float = 1.1
     hot_traffic: float = 0.70
     write_ratio: float = 0.25
+    sp_hot_buckets: tuple = ()  # ((weight, lo, hi), ...) in scaled pages
 
     def validate(self) -> None:
         _require(self.footprint_pages >= 1, "footprint_pages must be >= 1")
@@ -133,6 +148,27 @@ class ZipfHotspot:
         _require(self.zipf_alpha > 0.0, "zipf_alpha must be > 0")
         _require(0.0 <= self.hot_traffic <= 1.0, "hot_traffic in [0, 1]")
         _require(0.0 <= self.write_ratio <= 1.0, "write_ratio in [0, 1]")
+        for b in self.sp_hot_buckets:
+            _require(
+                isinstance(b, tuple) and len(b) == 3,
+                f"sp_hot_buckets entries must be (weight, lo, hi), got {b!r}",
+            )
+            w, lo, hi = b
+            _require(
+                isinstance(w, (int, float)) and w == w and w >= 0.0,
+                f"bucket weight must be >= 0, got {w!r}",
+            )
+            _require(
+                isinstance(lo, int) and isinstance(hi, int)
+                and 1 <= lo <= hi <= PAGES_PER_SP,
+                f"bucket bounds need 1 <= lo <= hi <= {PAGES_PER_SP}, "
+                f"got ({lo!r}, {hi!r})",
+            )
+        if self.sp_hot_buckets:
+            _require(
+                sum(b[0] for b in self.sp_hot_buckets) > 0.0,
+                "sp_hot_buckets weights must not all be zero",
+            )
 
     @property
     def _n_hot(self) -> int:
@@ -143,8 +179,67 @@ class ZipfHotspot:
 
     def setup(self, seed: jax.Array):
         key = jax.random.fold_in(jax.random.PRNGKey(seed), _SALT_SETUP)
-        perm = jax.random.permutation(key, self.footprint_pages)
-        return perm[: self._n_hot].astype(jnp.int32)
+        if not self.sp_hot_buckets:
+            perm = jax.random.permutation(key, self.footprint_pages)
+            return perm[: self._n_hot].astype(jnp.int32)
+        return self._bucket_hot_set(key)
+
+    def _bucket_hot_set(self, key: jax.Array) -> jax.Array:
+        """Table-II-shaped hot placement: per-superpage bucket quotas.
+
+        Host constants: the bucket CDF and (lo, hi) bounds. Device work per
+        superpage: one inverse-CDF bucket draw, one uniform quota draw in
+        [lo, hi], then a within-superpage rank (double argsort of uniforms)
+        marks each superpage's `quota` cheapest pages eligible. A final
+        global sort keys eligible pages first (random tie-break), partial
+        trailing superpages' ghost pages last, and takes `_n_hot` — so the
+        hot count stays exact even when quotas over- or under-shoot it.
+        """
+        fp = self.footprint_pages
+        n_sp = -(-fp // PAGES_PER_SP)
+        w = np.asarray([b[0] for b in self.sp_hot_buckets], np.float64)
+        cdf = np.cumsum(w / w.sum()).astype(np.float32)
+        cdf[-1] = np.float32(1.0)
+        lo = jnp.asarray([b[1] for b in self.sp_hot_buckets], jnp.int32)
+        hi = jnp.asarray([b[2] for b in self.sp_hot_buckets], jnp.int32)
+
+        u_b = jax.random.uniform(
+            jax.random.fold_in(key, _SALT_BUCKET), (n_sp,), jnp.float32
+        )
+        b = jnp.clip(
+            jnp.searchsorted(jnp.asarray(cdf), u_b, side="right"),
+            0, len(cdf) - 1,
+        )
+        u_c = jax.random.uniform(
+            jax.random.fold_in(key, _SALT_COUNT), (n_sp,), jnp.float32
+        )
+        span = (hi[b] - lo[b] + 1).astype(jnp.float32)
+        quota = jnp.minimum(
+            lo[b] + (u_c * span).astype(jnp.int32), hi[b]
+        )
+
+        page_grid = jnp.arange(
+            n_sp * PAGES_PER_SP, dtype=jnp.int32
+        ).reshape(n_sp, PAGES_PER_SP)
+        valid = page_grid < fp
+        quota = jnp.minimum(quota, valid.sum(axis=1).astype(jnp.int32))
+
+        r_u = jax.random.uniform(
+            jax.random.fold_in(key, _SALT_RANK), (n_sp, PAGES_PER_SP),
+            jnp.float32,
+        )
+        r_u = jnp.where(valid, r_u, 2.0)
+        rank = jnp.argsort(jnp.argsort(r_u, axis=1), axis=1)
+        eligible = (rank < quota[:, None]) & valid
+
+        tie = jax.random.uniform(
+            jax.random.fold_in(key, _SALT_TIE), (n_sp, PAGES_PER_SP),
+            jnp.float32,
+        )
+        sort_key = jnp.where(eligible, tie, 2.0 + tie)
+        sort_key = jnp.where(valid, sort_key, 4.0 + tie)
+        order = jnp.argsort(sort_key.reshape(-1))
+        return page_grid.reshape(-1)[order][: self._n_hot]
 
     def emit(self, aux, key: jax.Array, interval: jax.Array):
         del interval  # the hot set is stationary; only the key stream moves

@@ -37,7 +37,7 @@ import functools
 
 import numpy as np
 
-from repro.sim.config import APPS, MIXES, AppProfile
+from repro.sim.config import APPS, MIXES, SCALE_DOWN, AppProfile
 from repro.sim.trace import HOT_TRAFFIC_FRACTION, _mb_to_pages
 from repro.workloads.generators import (
     PAGES_PER_SP,
@@ -212,14 +212,31 @@ def materialize(name: str, seed: int, interval: int,
 # ---------------------------------------------------------------------------
 
 
+#: Table II bucket bounds: "% of superpages covered by N hot 4KB pages",
+#: upper bounds 32/64/128/256/384/512 — the same rows sim.trace's numpy
+#: sampler draws from, here rescaled to SCALE_DOWN'd pages for the device
+#: generator (the numpy path divides each drawn count by SCALE_DOWN too).
+_TABLE2_UPPERS = (32, 64, 128, 256, 384, 512)
+_TABLE2_LOWERS = (1, 33, 65, 129, 257, 385)
+
+
+def _table2_buckets(prof: AppProfile) -> tuple:
+    return tuple(
+        (float(w), max(1, lo // SCALE_DOWN), max(1, hi // SCALE_DOWN))
+        for w, lo, hi in zip(prof.sp_hot_dist, _TABLE2_LOWERS, _TABLE2_UPPERS)
+        if w > 0
+    )
+
+
 def _app_scenario(prof: AppProfile) -> Scenario:
     """A paper app profile as an on-device ZipfHotspot program.
 
     Footprint, per-interval access count, hot fraction, zipf skew, write
-    ratio, and the CHOP 70% hot-traffic rule come straight from Tables I/II;
-    the (host-loop-only) Table-II superpage clustering detail is traded for
-    in-scan generation — the staged numpy profiles remain the calibration
-    reference (docs/workloads.md).
+    ratio, the CHOP 70% hot-traffic rule, AND the Table-II hot-page-per-
+    superpage clustering come straight from Tables I/II — the clustering via
+    the generator's bucket sampler (sp_hot_buckets), so fig-1 calibration
+    runs entirely on the device generators (the numpy profiles remain the
+    independent cross-check; docs/workloads.md).
     """
     fp = _mb_to_pages(prof.footprint_mb)
     ws = min(_mb_to_pages(prof.working_set_mb), fp)
@@ -233,6 +250,7 @@ def _app_scenario(prof: AppProfile) -> Scenario:
             zipf_alpha=prof.zipf_alpha,
             hot_traffic=HOT_TRAFFIC_FRACTION,
             write_ratio=prof.write_ratio,
+            sp_hot_buckets=_table2_buckets(prof),
         ),
         inst_per_access=prof.inst_per_access,
     )

@@ -1,0 +1,348 @@
+"""Queueing timing subsystem tests (repro.timing; docs/timing.md).
+
+Four layers:
+
+  * construction validation: QueueGeometry, core.migration.make_timing and
+    the TIMING_PRESETS table reject malformed inputs loudly;
+  * charge_queues against a naive per-server python FIFO reference, plus the
+    queue-clock invariants (avail_cycle monotone non-decreasing, total
+    charged cycles conserved under any server relabeling);
+  * the traffic decomposition: timing.migration_cycles splits EXACTLY the
+    mig_cycles that sim.policies.interval_costs charges, per policy;
+  * the flat floor: timing_model="flat" is BITWISE identical to
+    queueing-with-infinite-banks on the staged and fused engine paths, the
+    engine matches the eager oracle under queueing, and a constrained
+    geometry actually stalls.
+
+The hypothesis layer mirrors tests/test_workloads.py: @given property tests
+share the deterministic check functions below and skip cleanly when
+hypothesis is not installed.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import migration
+from repro.sim.config import MachineConfig
+from repro.sim.policies import interval_costs
+from repro.sim.runner import simulate, simulate_eager
+from repro.timing import (
+    MIGRATING_POLICIES,
+    QueueGeometry,
+    charge_queues,
+    charged_service_cycles,
+    interval_step,
+    migration_cycles,
+    queue_init,
+)
+from repro.workloads import scenarios as S
+
+MC = MachineConfig()
+ALL_POLICIES = ("flat-static", "dram-only") + MIGRATING_POLICIES
+FLOOR_SCENARIOS = ("syn/streamcluster", "stress/zipf-hotspot", "stress/seq-scan")
+INTERVALS = 2
+ACCESSES = 800
+
+
+# ---------------------------------------------------------------------------
+# construction validation
+# ---------------------------------------------------------------------------
+
+
+def test_queue_geometry_validation():
+    QueueGeometry().validate()
+    assert QueueGeometry(3, 5, 2, 7).dram_servers == 15
+    assert QueueGeometry(3, 5, 2, 7).nvm_servers == 14
+    assert QueueGeometry.flat_floor().infinite
+    for bad in (
+        QueueGeometry(dram_channels=0),
+        QueueGeometry(dram_banks=-1),
+        QueueGeometry(nvm_channels=0),
+        QueueGeometry(nvm_banks=0),
+        QueueGeometry(dram_channels=2.5),  # non-int
+        QueueGeometry(issue_gap=0.0),
+        QueueGeometry(issue_gap=-8.0),
+        QueueGeometry(issue_gap=float("nan")),
+    ):
+        with pytest.raises(ValueError):
+            bad.validate()
+        with pytest.raises(ValueError):  # queue_init validates too
+            queue_init(bad)
+
+
+def test_make_timing_validation():
+    migration.make_timing(1.0, 2.0, 3.0, 4.0, 0.0, 0.0)  # zero bulk costs OK
+    for kw in (
+        {"t_nr": 0.0},
+        {"t_nw": -1.0},
+        {"t_dr": float("nan")},
+        {"t_dw": float("inf")},
+        {"t_nr": "fast"},
+        {"t_mig": -1.0},
+        {"t_writeback": -0.5},
+    ):
+        args = dict(t_nr=1.0, t_nw=1.0, t_dr=1.0, t_dw=1.0,
+                    t_mig=0.0, t_writeback=0.0)
+        args.update(kw)
+        with pytest.raises(ValueError):
+            migration.make_timing(**args)
+
+
+def test_timing_preset_validation():
+    for name in migration.TIMING_PRESETS:  # built-ins all well-formed
+        migration.preset_timing(name)
+    with pytest.raises(KeyError):  # unknown name stays a KeyError
+        migration.preset_timing("a100")
+    good = dict(migration.TIMING_PRESETS["paper-table4-sim"])
+    with pytest.raises(ValueError):
+        migration._validate_preset("p", [1, 2, 3])  # not a dict
+    with pytest.raises(ValueError):
+        migration._validate_preset("p", {k: v for k, v in good.items()
+                                         if k != "t_nr"})  # missing key
+    with pytest.raises(ValueError):
+        migration._validate_preset("p", {**good, "t_xx": 1.0})  # extra key
+    with pytest.raises(ValueError):
+        migration._validate_preset("p", {**good, "t_dw": 0.0})  # bad value
+
+
+def test_unknown_timing_model_rejected():
+    with pytest.raises(ValueError):
+        simulate("syn/streamcluster", "rainbow", intervals=1, accesses=256,
+                 timing_model="bogus")
+    with pytest.raises(ValueError):
+        simulate_eager("streamcluster", "rainbow", intervals=1, accesses=256,
+                       timing_model="bogus")
+
+
+# ---------------------------------------------------------------------------
+# charge_queues vs a naive FIFO reference + queue-clock invariants
+# ---------------------------------------------------------------------------
+
+
+def _naive_fifo(avail0, sid, arrivals, service, active):
+    """Reference semantics, one lane at a time: each lane starts at
+    max(arrival, avail[server]) and occupies its server for its service;
+    stall counts only active lanes."""
+    avail = np.array(avail0, np.float32)
+    stall = 0.0
+    for s, a, svc, act in zip(sid, arrivals, service, active):
+        start = max(np.float32(a), avail[s])
+        comp = np.float32(start + np.float32(svc))
+        if act:
+            stall += float(comp) - float(svc) - float(a)
+        avail[s] = comp
+    return avail, stall
+
+
+def _random_case(rng, n_servers, lanes):
+    avail0 = (rng.random(n_servers) * 200.0).astype(np.float32)
+    sid = rng.integers(0, n_servers, lanes).astype(np.int32)
+    arrivals = np.cumsum(rng.random(lanes) * 16.0).astype(np.float32)
+    service = (rng.random(lanes) * 50.0).astype(np.float32)
+    active = rng.random(lanes) < 0.8
+    service = np.where(active, service, 0.0).astype(np.float32)
+    return avail0, sid, arrivals, service, active
+
+
+def check_charge_matches_fifo(avail0, sid, arrivals, service, active):
+    avail_new, stall = charge_queues(
+        jnp.asarray(avail0), jnp.asarray(sid), jnp.asarray(arrivals),
+        jnp.asarray(service), jnp.asarray(active),
+    )
+    ref_avail, ref_stall = _naive_fifo(avail0, sid, arrivals, service, active)
+    np.testing.assert_allclose(np.asarray(avail_new), ref_avail,
+                               rtol=1e-5, atol=1e-2)
+    assert np.isclose(float(stall), ref_stall, rtol=1e-5, atol=1e-2)
+    # avail_cycle is monotone non-decreasing across charges
+    assert np.all(np.asarray(avail_new) >= avail0)
+    assert float(stall) >= 0.0
+
+
+def check_permutation_conservation(avail0, sid, arrivals, service, active,
+                                   rng):
+    """Relabeling the servers permutes per-server charge vectors bitwise and
+    leaves every total invariant."""
+    n_servers = avail0.shape[0]
+    perm = rng.permutation(n_servers).astype(np.int32)
+    sid2 = perm[sid]
+    avail2 = np.empty_like(avail0)
+    avail2[perm] = avail0
+
+    new1, stall1 = charge_queues(
+        jnp.asarray(avail0), jnp.asarray(sid), jnp.asarray(arrivals),
+        jnp.asarray(service), jnp.asarray(active))
+    new2, stall2 = charge_queues(
+        jnp.asarray(avail2), jnp.asarray(sid2), jnp.asarray(arrivals),
+        jnp.asarray(service), jnp.asarray(active))
+    # relabeling shifts segment offsets inside the associative-scan tree, so
+    # completions may move by an ulp — totals and vectors match to fp noise
+    np.testing.assert_allclose(np.asarray(new2)[perm], np.asarray(new1),
+                               rtol=1e-6, atol=1e-2)
+    assert np.isclose(float(stall1), float(stall2), rtol=1e-6, atol=1e-2)
+
+    csc1 = np.asarray(charged_service_cycles(
+        jnp.asarray(sid), jnp.asarray(service), n_servers))
+    csc2 = np.asarray(charged_service_cycles(
+        jnp.asarray(sid2), jnp.asarray(service), n_servers))
+    np.testing.assert_array_equal(csc2[perm], csc1)  # vector permutes bitwise
+    assert np.isclose(csc1.sum(), service.sum(dtype=np.float64), rtol=1e-5)
+
+
+@pytest.mark.parametrize("seed,n_servers,lanes",
+                         [(0, 1, 64), (1, 3, 96), (2, 8, 128), (3, 16, 48)])
+def test_charge_queues_floor(seed, n_servers, lanes):
+    rng = np.random.default_rng(seed)
+    case = _random_case(rng, n_servers, lanes)
+    check_charge_matches_fifo(*case)
+    check_permutation_conservation(*case, rng)
+
+
+def test_interval_step_monotone_and_aliasing():
+    geom = QueueGeometry(2, 2, 1, 2)
+    rng = np.random.default_rng(0)
+    n = 256
+    vpn = jnp.asarray(rng.integers(0, 4096, n).astype(np.int32))
+    wr = jnp.asarray(rng.random(n) < 0.3)
+    dram = jnp.asarray(rng.random(n) < 0.5)
+
+    q0 = queue_init(geom)
+    q1, tm1 = interval_step(geom, MC, "rainbow", q0, vpn, wr, dram,
+                            jnp.int32(0), jnp.int32(3), jnp.int32(1),
+                            jnp.int32(1))
+    q2, tm2 = interval_step(geom, MC, "rainbow", q1, vpn, wr, dram,
+                            jnp.int32(n), jnp.int32(0), jnp.int32(0),
+                            jnp.int32(0))
+    for prev, nxt in ((q0, q1), (q1, q2)):
+        for a, b in zip(prev, nxt):  # all four chains monotone
+            assert np.all(np.asarray(b) >= np.asarray(a))
+    for tm in (tm1, tm2):
+        assert all(float(x) >= 0.0 for x in tm)
+
+    # non-migrating policies alias the counterfactual chain -> mig_stall 0.0
+    q3, tm3 = interval_step(geom, MC, "flat-static", q0, vpn, wr, dram,
+                            jnp.int32(0), jnp.int32(0), jnp.int32(0),
+                            jnp.int32(0))
+    assert q3.dram_nomig is q3.dram_avail and q3.nvm_nomig is q3.nvm_avail
+    assert float(tm3.mig_stall) == 0.0
+
+    # the infinite floor is an exact-zero no-op
+    gi = QueueGeometry.flat_floor()
+    qi = queue_init(gi)
+    qi2, tmi = interval_step(gi, MC, "rainbow", qi, vpn, wr, dram,
+                             jnp.int32(0), jnp.int32(9), jnp.int32(2),
+                             jnp.int32(2))
+    assert qi2 is qi
+    assert all(float(x) == 0.0 for x in tmi)
+
+
+# ---------------------------------------------------------------------------
+# traffic decomposition
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_traffic_decomposition(policy):
+    """Per-tier migration traffic sums EXACTLY to the flat cost model's
+    mig_cycles — the queues charge the same cycles the counters price."""
+    for m, e, d in ((0, 0, 0), (3, 1, 1), (17, 5, 4), (0, 2, 2)):
+        dram, nvm = migration_cycles(
+            policy, MC, jnp.int32(m), jnp.int32(e), jnp.int32(d))
+        ref = interval_costs(policy, MC, m, e, d, 0)["mig_cycles"]
+        assert np.isclose(float(dram) + float(nvm), ref, rtol=1e-5), (
+            policy, m, e, d)
+    with pytest.raises(KeyError):
+        migration_cycles("bogus", MC, jnp.int32(1), jnp.int32(0), jnp.int32(0))
+
+
+# ---------------------------------------------------------------------------
+# the flat floor + engine/eager/constrained differentials
+# ---------------------------------------------------------------------------
+
+
+def check_flat_floor(app, policy, fused):
+    kw = dict(intervals=INTERVALS, accesses=ACCESSES, fused=fused)
+    flat = simulate(app, policy, **kw)
+    inf = simulate(app, policy, timing_model="queueing",
+                   queue_geometry=QueueGeometry.flat_floor(), **kw)
+    assert dataclasses.asdict(flat) == dataclasses.asdict(inf), (
+        f"{app} x {policy} (fused={fused}): flat != infinite-banks bitwise")
+    assert flat.bank_stall_cycles == 0.0 and flat.mig_stall_cycles == 0.0
+    assert flat.queue_occupancy_dram == 0.0 and flat.queue_occupancy_nvm == 0.0
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+@pytest.mark.parametrize("app", FLOOR_SCENARIOS)
+def test_flat_floor_staged(app, policy):
+    check_flat_floor(app, policy, fused=False)
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+@pytest.mark.parametrize("app", FLOOR_SCENARIOS)
+def test_flat_floor_fused(app, policy):
+    check_flat_floor(app, policy, fused=True)
+
+
+@pytest.mark.parametrize("policy", ("rainbow", "flat-static"))
+def test_engine_matches_eager_queueing(policy):
+    kw = dict(intervals=INTERVALS, accesses=ACCESSES,
+              timing_model="queueing", queue_geometry=QueueGeometry(2, 4, 1, 4))
+    eng = simulate("streamcluster", policy, **kw)
+    eag = simulate_eager("streamcluster", policy, **kw)
+    assert dataclasses.asdict(eng) == dataclasses.asdict(eag)
+
+
+def test_constrained_geometry_stalls():
+    tight = QueueGeometry(1, 2, 1, 2)
+    for policy in ("rainbow", "flat-static"):
+        flat = simulate("syn/streamcluster", policy,
+                        intervals=INTERVALS, accesses=2000)
+        q = simulate("syn/streamcluster", policy,
+                     intervals=INTERVALS, accesses=2000,
+                     timing_model="queueing", queue_geometry=tight)
+        assert q.bank_stall_cycles > 0.0, policy
+        assert q.total_cycles > flat.total_cycles, policy
+        assert q.queue_occupancy_dram >= 0.0 and q.queue_occupancy_nvm >= 0.0
+        if policy == "flat-static":
+            assert q.mig_stall_cycles == 0.0  # no migration traffic at all
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property layer (shares the check functions above)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # environment without hypothesis: keep the floors only
+    st = None
+
+if st is not None:
+
+    @given(seed=st.integers(0, 2**31 - 1), n_servers=st.integers(1, 32),
+           lanes=st.integers(1, 128))
+    @settings(max_examples=25, deadline=None)
+    def test_charge_queues_properties(seed, n_servers, lanes):
+        rng = np.random.default_rng(seed)
+        case = _random_case(rng, n_servers, lanes)
+        check_charge_matches_fifo(*case)
+        check_permutation_conservation(*case, rng)
+
+    @given(app=st.sampled_from(S.available_scenarios()),
+           policy=st.sampled_from(ALL_POLICIES))
+    @settings(max_examples=10, deadline=None)
+    def test_flat_floor_registry(app, policy):
+        check_flat_floor(app, policy, fused=False)
+
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_charge_queues_properties():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_flat_floor_registry():
+        pass

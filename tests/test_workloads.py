@@ -369,6 +369,40 @@ def test_app_presets_keep_exact_hot_page_counts():
         assert gen._n_hot == want, (app, gen._n_hot, want)
 
 
+def test_bucket_sampler_respects_quotas():
+    """sp_hot_buckets (Table II): every superpage's hot-page count stays
+    within its sampled bucket's [lo, hi] cap, the hot set is unique and
+    in-range, and the same seed reproduces the same set bitwise."""
+    gen = G.ZipfHotspot(
+        footprint_pages=16 * PAGES_PER_SP, accesses=1000, hot_frac=0.01,
+        sp_hot_buckets=((1.0, 2, 6), (1.0, 8, 12)),
+    )
+    gen.validate()
+    hot = np.asarray(gen.setup(jnp.int32(5)))
+    assert hot.shape == (gen._n_hot,)
+    assert len(np.unique(hot)) == hot.shape[0]
+    assert hot.min() >= 0 and hot.max() < gen.footprint_pages
+    per_sp = np.bincount(hot // PAGES_PER_SP, minlength=16)
+    # quotas cap per-superpage counts at the widest bucket's hi
+    assert per_sp.max() <= 12, per_sp
+    assert np.array_equal(hot, np.asarray(gen.setup(jnp.int32(5))))
+    assert not np.array_equal(hot, np.asarray(gen.setup(jnp.int32(6))))
+
+
+def test_bucket_validation_rejects_malformed_entries():
+    base = dict(footprint_pages=PAGES_PER_SP, accesses=100)
+    for bad in (
+        ((1.0, 2),),  # not a 3-tuple
+        ((-1.0, 1, 4),),  # negative weight
+        ((1.0, 0, 4),),  # lo < 1
+        ((1.0, 5, 4),),  # lo > hi
+        ((1.0, 1, PAGES_PER_SP + 1),),  # hi past the superpage
+        ((0.0, 1, 4),),  # all weights zero
+    ):
+        with pytest.raises(ValueError):
+            G.ZipfHotspot(sp_hot_buckets=bad, **base).validate()
+
+
 def test_plan_groups_fused_cells():
     """Fused cells group per scenario program (spec.source in the signature);
     fused and staged modes of one scenario never share a compile."""
