@@ -15,40 +15,64 @@ import sys
 import traceback
 
 
-def aggregate() -> None:
+def aggregate() -> list[str]:
     """Summarize every BENCH_*.json the modules wrote at the repo root.
 
     Each file carries a `headline` string and (when the module has a floor)
     a `gate` object with `floor` + `speedup`; this prints the one-screen
     roll-up the CI log and EXPERIMENTS.md link to.
+
+    Returns the list of failures (an unreadable BENCH file or a gate whose
+    `speedup` fell below its `floor`) — callers MUST treat a non-empty list
+    as a hard failure. Before this returned anything, a regressed gate
+    printed "[gate FAIL]" into a green CI log and nobody looked; now
+    `main()` and `--aggregate-only` both exit non-zero on it.
     """
     from benchmarks.common import ROOT
 
+    failures: list[str] = []
     paths = sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json")))
     if not paths:
-        return
+        return failures
     print("\n===== BENCH_*.json aggregate =====")
     for p in paths:
+        name = os.path.basename(p)
         try:
             with open(p) as f:
                 d = json.load(f)
         except (OSError, json.JSONDecodeError) as e:
-            print(f"{os.path.basename(p)}: unreadable ({e})")
+            print(f"{name}: unreadable ({e})")
+            failures.append(f"{name}: unreadable ({e})")
             continue
         gate = d.get("gate") or {}
         status = ""
         if "floor" in gate and "speedup" in gate:
             ok = gate["speedup"] >= gate["floor"]
             status = f" [gate {'PASS' if ok else 'FAIL'}]"
-        print(f"{os.path.basename(p)}: {d.get('headline', '(no headline)')}"
-              f"{status}")
+            if not ok:
+                failures.append(
+                    f"{name}: gate speedup {gate['speedup']} < floor "
+                    f"{gate['floor']}"
+                )
+        print(f"{name}: {d.get('headline', '(no headline)')}{status}")
+    return failures
 
 
 def main() -> None:
+    if "--aggregate-only" in sys.argv[1:]:
+        # gate check over already-written BENCH files (scripts/ci.sh runs
+        # this after the benchmark legs; no benchmarks are re-run)
+        gate_failures = aggregate()
+        if gate_failures:
+            print(f"\nFAILED gates: {gate_failures}")
+            sys.exit(1)
+        print("\nall BENCH gates pass")
+        return
     from benchmarks import (
         autotune_serving,
         engine_throughput,
         fleet_throughput,
+        nomad_async,
         paper_fig1_table12,
         paper_fig7_mpki,
         paper_fig8_tlb_cycles,
@@ -79,6 +103,7 @@ def main() -> None:
         engine_throughput,
         fleet_throughput,
         timing_contention,
+        nomad_async,
         policy_atlas,
         serving_rainbow,
         autotune_serving,
@@ -93,7 +118,7 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
             failed.append(name)
-    aggregate()
+    failed += aggregate()
     if failed:
         print(f"\nFAILED benchmarks: {failed}")
         sys.exit(1)

@@ -213,6 +213,51 @@ for row in bench["rows"]:
 print(f"  timing gate: {bench['headline']}")
 EOF
 
+echo "== nomad smoke: async family vs rainbow, staged == fused bitwise + BENCH_nomad.json schema =="
+python - <<'EOF'
+import dataclasses
+
+from repro.sim.runner import simulate
+from repro.timing import get_geometry
+
+kw = dict(intervals=3, accesses=4000, seed=3, timing_model="queueing",
+          queue_geometry=get_geometry("constrained"))
+staged = simulate("stress/zipf-hotspot", "nomad", **kw)
+fused = simulate("stress/zipf-hotspot", "nomad", fused=True, **kw)
+assert dataclasses.asdict(staged) == dataclasses.asdict(fused), (
+    "nomad: staged != fused (bitwise)")
+rainbow = simulate("stress/zipf-hotspot", "rainbow", **kw)
+assert staged.migrations > 0 and staged.mig_aborts > 0, staged
+assert rainbow.mig_aborts == 0, rainbow
+print(f"  nomad staged==fused bitwise OK: {staged.migrations} migrations, "
+      f"{staged.mig_aborts} aborts (rainbow mig_stall="
+      f"{rainbow.mig_stall_cycles:.3e}, nomad={staged.mig_stall_cycles:.3e})")
+EOF
+python -m benchmarks.nomad_async
+python - <<'EOF'
+import json
+
+bench = json.load(open("BENCH_nomad.json"))
+for key in ("benchmark", "quick", "headline", "rows",
+            "sync_degenerate_bitwise", "mig_stall_relief", "total_aborts",
+            "gate"):
+    assert key in bench, f"BENCH_nomad.json missing {key!r}"
+assert bench["sync_degenerate_bitwise"] is True, (
+    "async_window=1 must be bit-identical to synchronous rainbow")
+gate = bench["gate"]
+assert {"floor", "speedup"} <= set(gate)
+assert gate["speedup"] >= gate["floor"], (
+    f"mig_stall relief below floor: {gate['speedup']} < {gate['floor']}")
+assert bench["total_aborts"] > 0, "abort path never exercised"
+for row in bench["rows"]:
+    assert {"geometry", "app", "policy", "ipc", "total_cycles", "migrations",
+            "mig_aborts", "bank_stall_cycles", "mig_stall_cycles"} <= set(row), row
+print(f"  nomad gate: {bench['headline']}")
+EOF
+
 echo "== hscc parity: STREAMED fleet vs recorded snapshot (spot check, rel-err 0.0) =="
 python scripts/validate_hscc_parity.py --stream --apps soplex
 echo "  (full table: scripts/validate_hscc_parity.py [--stream])"
+
+echo "== bench aggregate: every BENCH_*.json gate must pass (non-zero exit on failure) =="
+python -m benchmarks.run --aggregate-only

@@ -346,6 +346,27 @@ def dram_apply_plan(
     return DramState(state, sp, page, reads, writes, touch)
 
 
+def dram_release(d: DramState, slots: jax.Array) -> DramState:
+    """Free a batch of slots (transactional aborts rolling back an install).
+
+    slots: int32[K], -1 lanes ignored. Freed slots go back to FREE with clean
+    counters, exactly the dram_init shape, so a later plan can reuse them as
+    the cheapest victim class.
+    """
+    valid = slots >= 0
+    n = d.slot_state.shape[0]
+    # invalid lanes out of bounds -> dropped (same idiom as dram_apply_plan)
+    s = jnp.where(valid, slots, n)
+    return DramState(
+        slot_state=d.slot_state.at[s].set(jnp.int32(FREE), mode="drop"),
+        slot_sp=d.slot_sp.at[s].set(-1, mode="drop"),
+        slot_page=d.slot_page.at[s].set(-1, mode="drop"),
+        slot_reads=d.slot_reads.at[s].set(0.0, mode="drop"),
+        slot_writes=d.slot_writes.at[s].set(0.0, mode="drop"),
+        last_touch=d.last_touch.at[s].set(0, mode="drop"),
+    )
+
+
 def dram_new_interval(d: DramState) -> DramState:
     """Zero the per-interval access counters (keep residency + dirty bits)."""
     return DramState(

@@ -593,7 +593,12 @@ class FleetJournal:
     process reads (the journal must live on a filesystem all workers share).
     """
 
-    VERSION = 1
+    #: Journal schema version. v1 headers carried only the version number;
+    #: v2 headers also record the SimMetrics field names (`schema`) so a
+    #: resume against a journal written by a DIFFERENT build fails loudly at
+    #: load() instead of deep inside SimMetrics(**fields) — or, worse,
+    #: silently dropping fields the old build never wrote.
+    VERSION = 2
 
     def __init__(self, path: str | os.PathLike, *, flush_groups: int = 8,
                  flush_bytes: int = 4 << 20):
@@ -623,6 +628,8 @@ class FleetJournal:
         if not self.path.exists():
             return {}
         done: dict[str, SimMetrics] = {}
+        known = {f.name for f in dataclasses.fields(SimMetrics)}
+        saw_header = False
         with self.path.open() as f:
             for line in f:
                 try:
@@ -633,9 +640,25 @@ class FleetJournal:
                     if rec.get("version") != self.VERSION:
                         raise ValueError(
                             f"{self.path}: journal version {rec.get('version')}"
-                            f" != {self.VERSION}"
+                            f" != {self.VERSION}; re-run with a fresh "
+                            "--journal path (mixed-version journals cannot "
+                            "be resumed)"
                         )
+                    unknown = set(rec.get("schema", ())) - known
+                    if unknown:
+                        raise ValueError(
+                            f"{self.path}: journal records SimMetrics fields "
+                            f"unknown to this build: {sorted(unknown)}; "
+                            "re-run with a fresh --journal path"
+                        )
+                    saw_header = True
                     continue
+                if not saw_header:
+                    raise ValueError(
+                        f"{self.path}: cell record before any fleet-journal "
+                        "header — a headerless (pre-versioning) or truncated "
+                        "journal; re-run with a fresh --journal path"
+                    )
                 for key, fields in rec["cells"].items():
                     done[key] = SimMetrics(**fields)
         return done
@@ -707,9 +730,13 @@ class FleetJournal:
         self.path.parent.mkdir(parents=True, exist_ok=True)
         lines = []
         if not self._drop_torn_tail():
-            lines.append(json.dumps(
-                {"kind": "fleet-journal", "version": self.VERSION}
-            ))
+            lines.append(json.dumps({
+                "kind": "fleet-journal",
+                "version": self.VERSION,
+                "schema": sorted(
+                    f.name for f in dataclasses.fields(SimMetrics)
+                ),
+            }))
         lines.extend(self._buf)
         with self.path.open("a") as f:
             f.write("".join(ln + "\n" for ln in lines))

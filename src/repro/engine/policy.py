@@ -60,6 +60,17 @@ class ControlPolicy:
                      0.0 reproduces the paper's per-interval counter reset
     counter_backend  "jax" scatter-adds or the fused page_counter kernel
                      ("ref" | "pallas" | "interpret")
+    async_window     intervals each migration generation's traffic is spread
+                     over (Nomad-style transactional migration, docs/policy.md);
+                     1 = the synchronous programs, charged in full at interval
+                     end — BITWISE identical to the pre-async step programs
+    abort_on_write   abort the in-flight copy of a page written mid-migration
+                     (Nomad's transactional abort); requires async_window > 1
+                     to have any effect — a window-1 copy completes before the
+                     next interval can write to it
+    shadow_residency during the copy window reads hit whichever tier is
+                     cheaper (the page is temporarily resident in both);
+                     False = exclusive residency (the remap flips at plan time)
     """
 
     interval_steps: int = static_field(default=8)
@@ -70,6 +81,9 @@ class ControlPolicy:
     threshold_init: float = static_field(default=0.0)
     counter_decay: float = static_field(default=0.0)
     counter_backend: str = static_field(default="jax")
+    async_window: int = static_field(default=1)
+    abort_on_write: bool = static_field(default=False)
+    shadow_residency: bool = static_field(default=False)
 
     # -- validation (satellite: impossible geometries fail loudly) ----------
 
@@ -109,6 +123,22 @@ class ControlPolicy:
             raise ValueError(
                 f"{context}: unknown counter_backend "
                 f"{self.counter_backend!r}; expected one of {COUNTER_BACKENDS}"
+            )
+        if not 1 <= self.async_window <= 64:
+            raise ValueError(
+                f"{context}: async_window must be in [1, 64] (got "
+                f"{self.async_window}); the in-flight ring is carried in the "
+                "scan state, so the window is part of the compile signature"
+            )
+        if not isinstance(self.abort_on_write, bool):
+            raise ValueError(
+                f"{context}: abort_on_write must be a bool (got "
+                f"{self.abort_on_write!r})"
+            )
+        if not isinstance(self.shadow_residency, bool):
+            raise ValueError(
+                f"{context}: shadow_residency must be a bool (got "
+                f"{self.shadow_residency!r})"
             )
         return self
 
@@ -242,6 +272,45 @@ def _hscc_2mb(mc=None) -> ControlPolicy:
     )
 
 
+@register_policy("nomad-sim")
+def _nomad_sim(mc=None) -> ControlPolicy:
+    """Nomad-style transactional async migration on the sim-rainbow knobs.
+
+    Same admission/selection as sim-rainbow; migration traffic is spread over
+    async_window intervals, writes to in-flight pages abort the transaction,
+    and reads during the copy hit whichever tier is cheaper (shadow residency).
+    """
+    mc = mc or _machine_config()
+    return dataclasses.replace(
+        _sim_rainbow(mc=mc),
+        async_window=4, abort_on_write=True, shadow_residency=True,
+    )
+
+
+@register_policy("nomad-sync")
+def _nomad_sync(mc=None) -> ControlPolicy:
+    """The degenerate window-1 Nomad: BITWISE identical to sim-rainbow.
+
+    Kept registered as the live anchor of the sync-degenerate invariant
+    (docs/policy.md): async_window=1 completes each copy inside its own
+    interval, so no aborts, no shadow window, no installments.
+    """
+    mc = mc or _machine_config()
+    return dataclasses.replace(_sim_rainbow(mc=mc), async_window=1)
+
+
+@register_policy("nomad-exclusive")
+def _nomad_exclusive(mc=None) -> ControlPolicy:
+    """Async installment charging only: exclusive residency, no aborts.
+
+    Isolates the traffic-spreading axis from the transactional axis — the
+    controller decisions stay bitwise equal to sim-rainbow; only the queue
+    charging schedule differs.
+    """
+    mc = mc or _machine_config()
+    return dataclasses.replace(_sim_rainbow(mc=mc), async_window=4)
+
+
 def _machine_config():
     # Lazy: repro.sim imports sim.runner -> sim.policies -> repro.engine, so a
     # module-level sim.config import here would cycle on `import repro.engine`.
@@ -255,6 +324,7 @@ SIM_POLICY_PRESETS = {
     "rainbow": "sim-rainbow",
     "hscc-4kb-mig": "hscc-4kb",
     "hscc-2mb-mig": "hscc-2mb",
+    "nomad": "nomad-sim",
 }
 
 

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import rainbow as rb
+from repro.engine import nomad as nomad_mod
 from repro.sim.policies import machine_timing
 from repro.timing import queueing as qtiming
 
@@ -165,6 +166,27 @@ def run_profiled(spec, state, chunks, *, seed=None, intervals: int | None = None
             return simloop._invalidate_4k(sim, inval, spec.fastpath), pol, stats
 
         p_apply = phase("apply", _apply)
+    elif policy == "nomad":
+        cfg = simloop._rainbow_cfg(spec)
+        p_observe = phase(
+            "observe",
+            lambda pol, ch: nomad_mod.nomad_observe(
+                cfg, pol, ch.sp, ch.page, ch.is_write, pol.rb.interval
+            ),
+        )
+
+        def _nomad_plan(pol, ch):
+            pol, rep = nomad_mod.nomad_close(
+                cfg, pol, ch.sp, ch.page, ch.is_write, mt, spec.mc
+            )
+            stats, inval = simloop._nomad_finish(spec, rep)
+            return pol, stats, inval, (rep.bulk_dram, rep.bulk_nvm)
+
+        p_plan = phase("plan", _nomad_plan)
+        p_apply = phase(
+            "apply",
+            lambda sim, inval: simloop._invalidate_4k(sim, inval, spec.fastpath),
+        )
     elif policy == "hscc-4kb-mig":
         p_plan = phase(
             "plan", lambda pol, ch: simloop._hscc4k_migrate(spec, pol, ch)
@@ -180,12 +202,16 @@ def run_profiled(spec, state, chunks, *, seed=None, intervals: int | None = None
 
     geom = spec.timing_geometry()
     if geom is not None:
-        def _queue(st, ch, stats):
+        def _queue(st, ch, stats, *bulk):
             in_dram = simloop._residency(spec, st, ch)
+            extra = (
+                {"bulk_dram": bulk[0], "bulk_nvm": bulk[1]} if bulk else {}
+            )
             q, tm = qtiming.interval_step(
                 geom, spec.mc, policy, st.q,
                 ch.vpn, ch.is_write, in_dram, st.sim.t,
                 stats.migrations, stats.evictions, stats.dirty_evictions,
+                **extra,
             )
             return q, stats._replace(
                 stall_dram=tm.stall_dram,
@@ -210,10 +236,15 @@ def run_profiled(spec, state, chunks, *, seed=None, intervals: int | None = None
         else:
             chunk = jax.tree.map(lambda x: x[i], chunks)
         sim = p_tlb(state, chunk)
+        bulk = ()
         if policy == "rainbow":
             pol = p_observe(state.pol, chunk)
             out = p_plan(pol)
             sim, pol, stats = p_apply(sim, pol, out)
+        elif policy == "nomad":
+            pol = p_observe(state.pol, chunk)
+            pol, stats, inval, bulk = p_plan(pol, chunk)
+            sim = p_apply(sim, inval)
         elif policy == "hscc-4kb-mig":
             pol, stats, inval = p_plan(state.pol, chunk)
             sim = p_apply(sim, inval)
@@ -225,7 +256,7 @@ def run_profiled(spec, state, chunks, *, seed=None, intervals: int | None = None
         if geom is not None:
             # consumes PRE-interval state (residency + access clock), like
             # the in-scan engine_step
-            q, stats = p_queue(state, chunk, stats)
+            q, stats = p_queue(state, chunk, stats, *bulk)
         state = simloop.EngineState(sim=sim, pol=pol, q=q)
         stats_per_interval.append(stats)
 

@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.core import rainbow as rb
 from repro.core.remap import translate
+from repro.engine import nomad as nomad_mod
 from repro.core.tlb import SplitTLB, split_tlb_invalidate_many, tlb_invalidate
 from repro.engine.policy import ControlPolicy, sim_policy_for
 from repro.sim import tlbsim
@@ -54,6 +55,7 @@ POLICY_KINDS = {
     "hscc-4kb-mig": "flat4k",
     "hscc-2mb-mig": "sp2m",
     "rainbow": "rainbow",
+    "nomad": "rainbow",
     "dram-only": "sp2m",
 }
 
@@ -176,12 +178,13 @@ class IntervalStats(NamedTuple):
     mig_stall: jax.Array  # f32: stall attributable to migration traffic
     backlog_dram: jax.Array  # f32: queue depth past interval end (cycles)
     backlog_nvm: jax.Array  # f32
+    aborts: jax.Array = None  # int32: transactional migration aborts (nomad)
 
 
 def _zero_stats() -> IntervalStats:
     z = jnp.zeros((), jnp.int32)
     f = jnp.zeros((), jnp.float32)
-    return IntervalStats(z, z, z, z, f, f, f, f, f)
+    return IntervalStats(z, z, z, z, f, f, f, f, f, z)
 
 
 # ---------------------------------------------------------------------------
@@ -386,6 +389,8 @@ def engine_init(spec: EngineSpec) -> EngineState:
         # threshold comes from the policy's threshold_init (mc.mig_threshold
         # for the default preset; an EngineSpec.control override wins)
         pol: Any = rb.rainbow_init(_rainbow_cfg(spec))
+    elif spec.policy == "nomad":
+        pol = nomad_mod.nomad_init(_rainbow_cfg(spec))
     elif spec.policy == "hscc-4kb-mig":
         pol = HsccPolicyState(
             resident=jnp.zeros((spec.footprint_pages,), bool),
@@ -428,6 +433,46 @@ def _rainbow_migrate(spec: EngineSpec, pol, chunk):
     )
     stats, inval = _rainbow_finish(spec, rep)
     return pol, stats, inval
+
+
+def _nomad_finish(spec: EngineSpec, rep) -> tuple[IntervalStats, jax.Array]:
+    """Shootdown list + interval stats from a NomadReport.
+
+    Aborted pages move back to NVM, so their 4KB entries are shot down like
+    evictions (aborts first: they were rolled back before the plan ran).
+    With async_window == 1 (or aborts disabled) rep.abort_vpn is None and
+    this reduces STATICALLY to _rainbow_finish — the degenerate gate's
+    bitwise anchor.
+    """
+    r = rep.rb
+    ev_valid = r.plan.evict_sp >= 0
+    ev_vpn = r.plan.evict_sp * PAGES_PER_SP + r.plan.evict_page
+    if rep.abort_vpn is not None:
+        vals = jnp.concatenate([rep.abort_vpn, ev_vpn])
+        valid = jnp.concatenate([rep.abort_vpn >= 0, ev_valid])
+    else:
+        vals, valid = ev_vpn, ev_valid
+    inval = _first_k_valid(vals, valid, spec.max_invalidate, spec.fastpath)
+    stats = _zero_stats()._replace(
+        migrations=r.n_migrated,
+        evictions=r.n_evicted,
+        dirty_evictions=r.n_dirty_evicted,
+        shootdowns=r.n_evicted + rep.n_aborts,
+        aborts=rep.n_aborts,
+    )
+    return stats, inval
+
+
+def _nomad_migrate(spec: EngineSpec, pol, chunk):
+    """pol', stats, shootdowns, (bulk_dram, bulk_nvm) — the bulk pair is the
+    interval's installment for the queueing model's bulk_charge."""
+    cfg = _rainbow_cfg(spec)
+    pol, rep = nomad_mod.nomad_interval(
+        cfg, pol, chunk.sp, chunk.page, chunk.is_write,
+        machine_timing(spec.mc), spec.mc,
+    )
+    stats, inval = _nomad_finish(spec, rep)
+    return pol, stats, inval, (rep.bulk_dram, rep.bulk_nvm)
 
 
 def _hscc_admit(
@@ -540,6 +585,10 @@ def _residency(
     """Per-access fast-tier residency at interval start (policy-specific)."""
     if spec.policy == "rainbow":
         in_dram, _ = translate(state.pol.remap, chunk.sp, chunk.page)
+    elif spec.policy == "nomad":
+        in_dram = nomad_mod.residency(
+            _rainbow_cfg(spec), state.pol, chunk.sp, chunk.page, chunk.is_write
+        )
     elif spec.policy == "hscc-4kb-mig":
         in_dram = state.pol.resident[
             jnp.minimum(chunk.vpn, spec.footprint_pages - 1)
@@ -575,8 +624,11 @@ def engine_step(
     sim = _access_scan(spec, state.sim, chunk, in_dram)
 
     inval = None
+    bulk = None
     if policy == "rainbow":
         pol, stats, inval = _rainbow_migrate(spec, state.pol, chunk)
+    elif policy == "nomad":
+        pol, stats, inval, bulk = _nomad_migrate(spec, state.pol, chunk)
     elif policy == "hscc-4kb-mig":
         pol, stats, inval = _hscc4k_migrate(spec, state.pol, chunk)
     elif policy == "hscc-2mb-mig":
@@ -588,10 +640,14 @@ def engine_step(
     q = state.q
     geom = spec.timing_geometry()
     if geom is not None:
+        extra = {} if bulk is None else {
+            "bulk_dram": bulk[0], "bulk_nvm": bulk[1],
+        }
         q, tm = qtiming.interval_step(
             geom, spec.mc, policy, state.q,
             chunk.vpn, chunk.is_write, in_dram, t0,
             stats.migrations, stats.evictions, stats.dirty_evictions,
+            **extra,
         )
         stats = stats._replace(
             stall_dram=tm.stall_dram,

@@ -24,6 +24,35 @@ from repro.memory.kvcache import PagedConfig, paged_init
 from repro.models import model as M
 from repro.serving.rainbow_decode import rainbow_decode_step, record_mass_trace
 from repro.serving.steps import greedy_sample
+from repro.timing import GEOMETRY_PRESETS, get_geometry
+
+
+def resolve_timing(args, error):
+    """Validated (timing_model, QueueGeometry | None) from the CLI flags.
+
+    Mirrors EngineSpec.timing_geometry(): "flat" resolves to no geometry and
+    REJECTS an explicit --queue-geometry (it would otherwise be silently
+    dropped — the same loud-over-lossy rule the --kv flat audit applies to
+    the controller knobs); "queueing" resolves the named preset through
+    repro.timing.get_geometry, unknown names listed loudly.
+    """
+    if args.timing_model == "flat":
+        if args.queue_geometry is not None:
+            error(
+                f"--queue-geometry {args.queue_geometry} has no effect under "
+                "--timing-model flat; drop it or pass --timing-model queueing"
+            )
+        return "flat", None
+    name = args.queue_geometry or "default"
+    try:
+        geom = get_geometry(name)
+    except KeyError:
+        error(
+            f"unknown --queue-geometry preset {name!r}; registered: "
+            f"{sorted(GEOMETRY_PRESETS)}"
+        )
+    geom.validate()
+    return "queueing", geom
 
 
 def build_paged_config(args, nblk: int) -> PagedConfig:
@@ -78,7 +107,16 @@ def main() -> None:
     ap.add_argument("--autotune", action="store_true",
                     help="tune (interval_steps, threshold_init) against a "
                          "recorded pilot decode trace before serving")
+    # -- timing model (paged path) --
+    ap.add_argument("--timing-model", choices=["flat", "queueing"],
+                    default="flat",
+                    help="cost model for reporting/tuning: flat event counts "
+                         "or the per-channel/bank queueing model")
+    ap.add_argument("--queue-geometry", default=None,
+                    help="registered QueueGeometry preset, one of "
+                         f"{sorted(GEOMETRY_PRESETS)} (queueing model only)")
     args = ap.parse_args()
+    timing_model, queue_geom = resolve_timing(args, ap.error)
 
     cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
     if args.prompt_len < 1 or args.tokens < 1:
@@ -96,6 +134,9 @@ def main() -> None:
                 ("--top-n", args.top_n),
                 ("--hot-slots", args.hot_slots),
                 ("--max-promotions", args.max_promotions),
+                ("--queue-geometry", args.queue_geometry),
+                ("--timing-model",
+                 None if timing_model == "flat" else timing_model),
             ] if v is not None
         ]
         if args.policy != "serving-default":
@@ -130,6 +171,9 @@ def main() -> None:
             # impossible geometry / unknown preset -> clean CLI error
             ap.error(str(e.args[0]) if e.args else str(e))
 
+        if timing_model == "queueing":
+            print(f"timing model: queueing, geometry {queue_geom}")
+
         if args.autotune:
             from repro.engine.autotune import TunePlan, autotune
 
@@ -142,10 +186,25 @@ def main() -> None:
             )
             res = autotune(plan, trace)
             print(f"autotune ({pilot}-step pilot trace): {res.summary()}")
+            tuned = res.tuned_policy()
+            # every knob outside the tuned axes (including the async-migration
+            # family: async_window / abort_on_write / shadow_residency) must
+            # ride through the tuner untouched — a tuned policy that silently
+            # reset them would serve a different policy than requested
+            tuned_axes = {name for name, _ in plan.space}
+            drifted = {
+                name
+                for name in type(tuned).__dataclass_fields__
+                if name not in tuned_axes
+                and getattr(tuned, name) != getattr(pcfg.policy, name)
+            }
+            assert not drifted, (
+                f"autotune dropped untuned ControlPolicy knobs: {sorted(drifted)}"
+            )
             pcfg = PagedConfig(
                 block_size=pcfg.block_size,
                 blocks_per_seq=pcfg.blocks_per_seq,
-                policy=res.tuned_policy(),
+                policy=tuned,
             )
 
         kv = paged_init(cfg, pcfg, b, 1, cfg.num_layers)

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.core import rainbow as rb
 from repro.core.migration import TimingParams, make_timing
+from repro.engine import nomad as nomad_mod
 from repro.core.tlb import split_tlb_invalidate_many
 from repro.engine.policy import sim_policy_for
 from repro.sim import tlbsim
@@ -58,6 +59,9 @@ class IntervalResult:
     mig_stall: float = 0.0
     backlog_dram: float = 0.0
     backlog_nvm: float = 0.0
+    # transactional async migration (engine.nomad): writes that hit an
+    # in-flight page abort its transaction; 0 for every synchronous policy
+    aborts: int = 0
 
 
 def interval_costs(
@@ -94,8 +98,11 @@ def interval_costs(
             * (PAGES_PER_SP * 4096 / mc.line_bytes)
             * mc.clflush_per_line,
         }
-    if policy == "rainbow":
-        # clean evictions write back only the 8-byte remap pointer (§III-E)
+    if policy in ("rainbow", "nomad"):
+        # clean evictions write back only the 8-byte remap pointer (§III-E).
+        # nomad prices a migration generation identically at creation time;
+        # only the queue-charging SCHEDULE differs (installments over
+        # async_window intervals — repro.timing.traffic).
         moved = migrations + evictions
         return {
             "mig_bytes": migrations * 4096.0 + dirty * 4096.0
@@ -139,6 +146,10 @@ class Policy:
         self._q = (
             qtiming.queue_init(self._geom) if self._geom is not None else None
         )
+        # async policies (Nomad) set this per interval to the pre-scheduled
+        # installment charge; synchronous policies leave it None and the
+        # queue model derives the lump from the interval's counts itself
+        self._bulk = None
 
     def residency(self, trace: Trace) -> jax.Array:
         raise NotImplementedError
@@ -163,6 +174,11 @@ class Policy:
         res = self.migrate(trace, np.asarray(in_dram))
         res.counters = delta
         if self._geom is not None:
+            extra = (
+                {}
+                if self._bulk is None
+                else {"bulk_dram": self._bulk[0], "bulk_nvm": self._bulk[1]}
+            )
             # the SAME jitted program the engine scan inlines per interval
             self._q, tm = qtiming.interval_step_jit(
                 self._geom, self.mc, self.name, self._q,
@@ -173,6 +189,7 @@ class Policy:
                 jnp.int32(res.migrations),
                 jnp.int32(res.evictions),
                 jnp.int32(res.dirty_evictions),
+                **extra,
             )
             res.stall_dram = float(tm.stall_dram)
             res.stall_nvm = float(tm.stall_nvm)
@@ -278,6 +295,74 @@ class Rainbow(Policy):
         )
 
 
+class Nomad(Policy):
+    """Transactional asynchronous migration (engine.nomad), eager oracle.
+
+    Drives the SAME pure functions the engine step program inlines
+    (nomad_interval / residency), one host round-trip per interval — the
+    equivalence anchor for the async family, exactly as Rainbow anchors the
+    synchronous program.
+    """
+
+    name = "nomad"
+    kind = "rainbow"
+
+    def __init__(self, mc, trace0, seed=0, **kw):
+        super().__init__(mc, trace0, seed, **kw)
+        self.cfg = rb.RainbowConfig(
+            num_superpages=self.num_sp,
+            pages_per_sp=PAGES_PER_SP,
+            policy=sim_policy_for("nomad", mc),
+        )
+        self.state = nomad_mod.nomad_init(self.cfg)
+
+    def residency(self, trace: Trace) -> np.ndarray:
+        return np.asarray(
+            nomad_mod.residency(
+                self.cfg, self.state,
+                jnp.asarray(trace.sp), jnp.asarray(trace.page),
+                jnp.asarray(trace.is_write),
+            )
+        )
+
+    def migrate(self, trace: Trace, in_dram) -> IntervalResult:
+        mc = self.mc
+        self.state, rep = nomad_mod.nomad_interval(
+            self.cfg, self.state,
+            jnp.asarray(trace.sp), jnp.asarray(trace.page),
+            jnp.asarray(trace.is_write),
+            self.timing, mc,
+        )
+        r = rep.rb
+        migrations = int(r.n_migrated)
+        evictions = int(r.n_evicted)
+        dirty_ev = int(r.n_dirty_evicted)
+        aborts = int(rep.n_aborts)
+        # aborts roll back an installed remap entry, so they shoot down the
+        # 4KB TLB exactly like evictions (aborts first — same concat order
+        # as the engine's _nomad_finish)
+        shootdowns = evictions + aborts
+        ev_vpn = r.plan.evict_sp * PAGES_PER_SP + r.plan.evict_page
+        ev_valid = r.plan.evict_sp >= 0
+        if rep.abort_vpn is not None:
+            vals = jnp.concatenate([rep.abort_vpn, ev_vpn])
+            valid = jnp.concatenate([rep.abort_vpn >= 0, ev_valid])
+        else:
+            vals, valid = ev_vpn, ev_valid
+        self._invalidate_4k(first_k_valid(vals, valid, 256))
+        self._bulk = (rep.bulk_dram, rep.bulk_nvm)
+        return IntervalResult(
+            counters=tlbsim.zero_counters(),
+            migrations=migrations,
+            evictions=evictions,
+            dirty_evictions=dirty_ev,
+            shootdowns=shootdowns,
+            aborts=aborts,
+            **interval_costs(self.name, mc, migrations, evictions, dirty_ev,
+                             shootdowns),
+        )
+
+
 #: The eager oracle set. The HSCC policies exist ONLY as engine step
 #: programs (engine.simloop) — see the module docstring for the deletion
 #: rationale and scripts/validate_hscc_parity.py for the durable parity check.
@@ -285,4 +370,5 @@ POLICY_CLASSES = {
     "flat-static": FlatStatic,
     "rainbow": Rainbow,
     "dram-only": DramOnly,
+    "nomad": Nomad,
 }

@@ -38,6 +38,8 @@ _ZERO_TOTALS = {
     # queueing timing model (repro.timing); exact 0.0 under timing_model="flat"
     "stall_dram": 0.0, "stall_nvm": 0.0, "mig_stall": 0.0,
     "backlog_dram": 0.0, "backlog_nvm": 0.0, "intervals": 0,
+    # transactional async migration (engine.nomad); 0 for synchronous policies
+    "aborts": 0,
 }
 
 
@@ -66,6 +68,9 @@ class SimMetrics:
     mig_stall_cycles: float = 0.0
     queue_occupancy_dram: float = 0.0
     queue_occupancy_nvm: float = 0.0
+    # transactional async migration (engine.nomad): writes to in-flight pages
+    # that aborted the copy; exactly 0 for every synchronous policy
+    mig_aborts: int = 0
 
     def row(self) -> dict[str, Any]:
         d = dataclasses.asdict(self)
@@ -148,6 +153,7 @@ def finalize_metrics(
         mig_stall_cycles=totals["mig_stall"],
         queue_occupancy_dram=totals["backlog_dram"] / max(totals["intervals"], 1),
         queue_occupancy_nvm=totals["backlog_nvm"] / max(totals["intervals"], 1),
+        mig_aborts=totals["aborts"],
     )
 
 
@@ -160,6 +166,11 @@ def totals_from_stats(
     e_i = np.asarray(stats.evictions)
     d_i = np.asarray(stats.dirty_evictions)
     s_i = np.asarray(stats.shootdowns)
+    a_i = (
+        np.asarray(stats.aborts)
+        if stats.aborts is not None
+        else np.zeros_like(m_i)
+    )
     cols = zip(
         m_i.tolist(), e_i.tolist(), d_i.tolist(), s_i.tolist(),
         np.asarray(stats.stall_dram).tolist(),
@@ -167,8 +178,9 @@ def totals_from_stats(
         np.asarray(stats.mig_stall).tolist(),
         np.asarray(stats.backlog_dram).tolist(),
         np.asarray(stats.backlog_nvm).tolist(),
+        a_i.tolist(),
     )
-    for m, e, d, s, sd, sn, ms, bd, bn in cols:
+    for m, e, d, s, sd, sn, ms, bd, bn, ab in cols:
         costs = interval_costs(policy, mc, m, e, d, s)
         totals["migrations"] += m
         totals["evictions"] += e
@@ -184,6 +196,7 @@ def totals_from_stats(
         totals["mig_stall"] += ms
         totals["backlog_dram"] += bd
         totals["backlog_nvm"] += bn
+        totals["aborts"] += ab
         totals["intervals"] += 1
     return totals
 
@@ -316,6 +329,7 @@ def simulate_eager(
         totals["mig_stall"] += res.mig_stall
         totals["backlog_dram"] += res.backlog_dram
         totals["backlog_nvm"] += res.backlog_nvm
+        totals["aborts"] += res.aborts
         totals["intervals"] += 1
 
     return finalize_metrics(

@@ -7,6 +7,7 @@ flat == queueing with infinite banks, bitwise — is the differential anchor
 every existing figure keeps.
 """
 from repro.timing.queueing import (
+    GEOMETRY_PRESETS,
     MIGRATING_POLICIES,
     IntervalTiming,
     QueueGeometry,
@@ -14,6 +15,7 @@ from repro.timing.queueing import (
     bulk_charge,
     charge_queues,
     charged_service_cycles,
+    get_geometry,
     interval_step,
     interval_step_jit,
     queue_init,
@@ -22,6 +24,7 @@ from repro.timing.queueing import (
 from repro.timing.traffic import migration_cycles
 
 __all__ = [
+    "GEOMETRY_PRESETS",
     "MIGRATING_POLICIES",
     "IntervalTiming",
     "QueueGeometry",
@@ -29,6 +32,7 @@ __all__ = [
     "bulk_charge",
     "charge_queues",
     "charged_service_cycles",
+    "get_geometry",
     "interval_step",
     "interval_step_jit",
     "migration_cycles",

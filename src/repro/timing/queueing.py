@@ -45,7 +45,7 @@ from repro.timing import traffic
 #: Policies whose step programs emit migration traffic (everything else
 #: charges zero bulk cycles, so the no-migration counterfactual chain is
 #: skipped and mig_stall is an exact 0.0).
-MIGRATING_POLICIES = ("rainbow", "hscc-4kb-mig", "hscc-2mb-mig")
+MIGRATING_POLICIES = ("rainbow", "hscc-4kb-mig", "hscc-2mb-mig", "nomad")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +97,30 @@ class QueueGeometry:
     def flat_floor(cls, issue_gap: float = 8.0) -> "QueueGeometry":
         """Infinite banks: the geometry whose metrics == the flat model."""
         return cls(issue_gap=issue_gap, infinite=True)
+
+
+#: Named geometries every entry point (CLI flags, benchmarks) resolves from.
+#: "constrained" is the scarce-bandwidth headline geometry of
+#: benchmarks/timing_contention.py and benchmarks/nomad_async.py.
+GEOMETRY_PRESETS: dict[str, QueueGeometry] = {
+    "default": QueueGeometry(),
+    "flat-floor": QueueGeometry.flat_floor(),
+    "roomy": QueueGeometry(
+        dram_channels=8, dram_banks=16, nvm_channels=4, nvm_banks=16),
+    "constrained": QueueGeometry(
+        dram_channels=1, dram_banks=2, nvm_channels=1, nvm_banks=2),
+}
+
+
+def get_geometry(name: str) -> QueueGeometry:
+    """Resolve a named QueueGeometry preset, loudly rejecting unknowns."""
+    try:
+        return GEOMETRY_PRESETS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown queue-geometry preset {name!r}; registered: "
+            f"{sorted(GEOMETRY_PRESETS)}"
+        ) from None
 
 
 class QueueState(NamedTuple):
@@ -224,6 +248,8 @@ def interval_step(
     migrations,
     evictions,
     dirty,
+    bulk_dram=None,
+    bulk_nvm=None,
 ) -> tuple[QueueState, IntervalTiming]:
     """Charge one interval's demand + migration traffic through the queues.
 
@@ -231,6 +257,14 @@ def interval_step(
     `t0` is the running access clock BEFORE this interval's accesses (the
     engine's SimState.t, int32); migrations/evictions/dirty are this
     interval's counts (int32 scalars, traced or concrete).
+
+    `bulk_dram`/`bulk_nvm` (f32 scalars) override the per-tier bulk charge
+    for migrating policies: the async (nomad) step programs pre-schedule each
+    generation's traffic into per-interval INSTALLMENTS and pass this
+    interval's installment here, instead of the whole generation landing at
+    `t_end`. The counterfactual `*_nomig` chain stays demand-only either
+    way, so `mig_stall` remains the exact per-interval (here: per-
+    installment) attribution.
 
     The service vector is exactly the hoisted per-access mem_cost of
     tlbsim.make_interval_runner: ``where(write, t_?w, t_?r)`` per tier.
@@ -275,9 +309,12 @@ def interval_step(
         n_nomig, n_stall0 = charge_queues(
             q.nvm_nomig, sid_nvm, arrivals, svc_nvm, ~dram
         )
-        dram_cycles, nvm_cycles = traffic.migration_cycles(
-            policy, mc, migrations, evictions, dirty
-        )
+        if bulk_dram is not None:
+            dram_cycles, nvm_cycles = bulk_dram, bulk_nvm
+        else:
+            dram_cycles, nvm_cycles = traffic.migration_cycles(
+                policy, mc, migrations, evictions, dirty
+            )
         d_avail = bulk_charge(d_avail, dram_cycles, t_end)
         n_avail = bulk_charge(n_avail, nvm_cycles, t_end)
         mig_stall = jnp.maximum(
@@ -306,12 +343,12 @@ def interval_step(
 )
 def interval_step_jit(
     geom, mc, policy, q, vpn, is_write, in_dram, t0, migrations, evictions,
-    dirty,
+    dirty, bulk_dram=None, bulk_nvm=None,
 ):
     """Jitted interval_step: the eager oracle (sim.policies) dispatches the
     SAME program per interval that the engine scan inlines, so the two paths
     accumulate bit-identical per-interval stall floats."""
     return interval_step(
         geom, mc, policy, q, vpn, is_write, in_dram, t0, migrations,
-        evictions, dirty,
+        evictions, dirty, bulk_dram, bulk_nvm,
     )

@@ -37,10 +37,16 @@ def migration_cycles(policy: str, mc, migrations, evictions, dirty):
       hscc-4kb / hscc-2mb: every moved unit (migrations + evictions) costs
         mig_page_cost (x512 for superpages), dirty victims add a writeback;
         each transfer splits half to either tier.
-      rainbow: only migrations pay the page copy and only dirty evictions
-        pay a writeback — clean evictions write back the 8-byte remap
-        pointer, which the flat model prices at zero cycles (§III-E), so
-        the queues see zero too.
+      rainbow / nomad: only migrations pay the page copy and only dirty
+        evictions pay a writeback — clean evictions write back the 8-byte
+        remap pointer, which the flat model prices at zero cycles (§III-E),
+        so the queues see zero too. Nomad plans the same generations as
+        rainbow (identical per-generation cycles); the DIFFERENCE is purely
+        the charging schedule — the engine spreads each generation's total
+        over async_window installments and passes the per-interval
+        installment to interval_step via bulk_dram/bulk_nvm, so this
+        function prices a nomad generation at creation time exactly like a
+        rainbow interval.
 
     migrations/evictions/dirty are int32 scalars (traced or concrete).
     """
@@ -53,7 +59,7 @@ def migration_cycles(policy: str, mc, migrations, evictions, dirty):
         half_wb = jnp.float32(mc.writeback_page_cost * scale / 2.0)
         per_tier = (m + e) * half_mig + d * half_wb
         return per_tier, per_tier
-    if policy == "rainbow":
+    if policy in ("rainbow", "nomad"):
         half_mig = jnp.float32(mc.mig_page_cost / 2.0)
         half_wb = jnp.float32(mc.writeback_page_cost / 2.0)
         per_tier = m * half_mig + d * half_wb

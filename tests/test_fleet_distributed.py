@@ -157,6 +157,67 @@ def test_kill_and_resume_matches_uninterrupted(tmp_path):
     assert set(json.loads(lines[2])["cells"]).isdisjoint(first_group_keys)
 
 
+def test_journal_schema_version_enforced(tmp_path):
+    """A journal from a different build fails LOUDLY at load(), never silently.
+
+    Three mixed-schema shapes, all of which a resume must refuse:
+      * a header with an older version number (pre-schema v1 journal);
+      * a headerless file (pre-versioning writer, or the header line lost
+        to truncation) whose cell records would otherwise parse fine;
+      * a current-version header recording SimMetrics fields this build
+        does not know (journal written by a NEWER build).
+    A journal this build wrote itself must round-trip, including the new
+    fields (mig_aborts), and its header must carry the schema list.
+    """
+    import dataclasses
+
+    import pytest
+
+    from repro.engine import fleet
+    from repro.engine.fleet import FleetJournal
+    from repro.sim.runner import SimMetrics
+
+    schema = sorted(f.name for f in dataclasses.fields(SimMetrics))
+    cell_line = json.dumps({"cells": {}, "timing": {"cells": 1}})
+
+    v1 = tmp_path / "v1.jsonl"
+    v1.write_text(
+        json.dumps({"kind": "fleet-journal", "version": 1}) + "\n"
+        + cell_line + "\n"
+    )
+    with pytest.raises(ValueError, match="journal version 1"):
+        FleetJournal(v1).load()
+
+    headerless = tmp_path / "headerless.jsonl"
+    headerless.write_text(cell_line + "\n")
+    with pytest.raises(ValueError, match="before any fleet-journal header"):
+        FleetJournal(headerless).load()
+
+    newer = tmp_path / "newer.jsonl"
+    newer.write_text(
+        json.dumps({
+            "kind": "fleet-journal",
+            "version": FleetJournal.VERSION,
+            "schema": schema + ["field_from_the_future"],
+        }) + "\n" + cell_line + "\n"
+    )
+    with pytest.raises(ValueError, match="field_from_the_future"):
+        FleetJournal(newer).load()
+
+    # a journal this build writes round-trips, mixed-version error paths
+    # notwithstanding — and the header records the full field list
+    from repro.launch.distributed import _smoke_plan
+
+    journal = tmp_path / "own.jsonl"
+    res = fleet.FleetRunner().run(_smoke_plan(), journal=journal)
+    header = json.loads(journal.read_text().splitlines()[0])
+    assert header["version"] == FleetJournal.VERSION
+    assert header["schema"] == schema
+    loaded = FleetJournal(journal).load()
+    assert set(loaded) == {c.key() for c, _ in res.items()}
+    assert all(isinstance(m, SimMetrics) for m in loaded.values())
+
+
 def test_batched_journal_kill_mid_coalesce(tmp_path):
     """Hard kill mid-coalesce under batched retirement (flush_groups=2).
 

@@ -1,0 +1,186 @@
+"""Differential gates for the transactional async migration family.
+
+engine.nomad wraps the unchanged rainbow controller with an in-flight
+transaction ring and installment-spread queue charging, so it inherits the
+repo's two standing equivalence contracts and adds one of its own:
+
+  * engine == eager oracle, bitwise, on SimMetrics — the scanned nomad step
+    program against sim.policies.Nomad (which drives the SAME pure
+    functions host-side), across flat and queueing timing models;
+  * staged == fused, bitwise — the in-scan synthesized trace against the
+    host-staged chunks;
+  * the sync-degenerate invariant: with async_window=1 every async code
+    path is STATICALLY skipped and the nomad program is bit-identical to
+    the synchronous rainbow program (stats AND final sim state) — the
+    anchor that pins the whole family to the already-validated baseline.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.sim.config import MachineConfig
+from repro.sim.runner import simulate, simulate_eager
+from repro.timing import get_geometry
+
+
+def _tree_equal(a, b) -> bool:
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+@pytest.mark.parametrize("timing_model,geometry", [
+    ("flat", None),
+    ("queueing", "constrained"),
+])
+def test_engine_matches_eager_oracle(timing_model, geometry):
+    kw = dict(
+        intervals=4, accesses=4000, seed=7,
+        timing_model=timing_model,
+        queue_geometry=None if geometry is None else get_geometry(geometry),
+    )
+    eng = simulate("streamcluster", "nomad", **kw)
+    ref = simulate_eager("streamcluster", "nomad", **kw)
+    assert dataclasses.asdict(eng) == dataclasses.asdict(ref)
+    # the default preset is the full transactional config: write-heavy
+    # streamcluster must actually exercise the abort path
+    assert eng.mig_aborts > 0
+    assert eng.shootdowns == eng.evictions + eng.mig_aborts
+
+
+def test_staged_matches_fused():
+    kw = dict(intervals=3, accesses=4000, seed=3,
+              timing_model="queueing")
+    staged = simulate("stress/zipf-hotspot", "nomad", **kw)
+    fused = simulate("stress/zipf-hotspot", "nomad", fused=True, **kw)
+    assert dataclasses.asdict(staged) == dataclasses.asdict(fused)
+
+
+def test_sync_degenerate_bitwise_equals_rainbow():
+    """async_window=1 ("nomad-sync") == rainbow, program-for-program.
+
+    Not just equal SimMetrics: the per-interval stats vector and the final
+    TLB/counter state must match bitwise, under a constrained queue
+    geometry where any charging-schedule difference would show up in the
+    stall fields. 0.0 + C/1.0 is bitwise C in f32, so the single
+    installment lands exactly where rainbow lands its lump.
+    """
+    from repro.engine import simloop
+    from repro.engine.policy import get_policy
+
+    mc = MachineConfig()
+    chunks, meta = simloop.make_chunks("streamcluster", "rainbow", mc, 7, 4, 3000)
+
+    def run(policy, control):
+        spec = simloop.EngineSpec(
+            policy=policy, mc=mc,
+            num_superpages=meta["num_superpages"],
+            footprint_pages=meta["footprint_pages"],
+            control=control,
+            timing_model="queueing",
+            queue_geometry=get_geometry("constrained"),
+        )
+        return simloop.engine_run(spec, simloop.engine_init(spec), chunks)
+
+    st_r, stats_r = run("rainbow", None)
+    st_n, stats_n = run("nomad", get_policy("nomad-sync", mc=mc))
+    assert int(np.asarray(stats_n.aborts).sum()) == 0
+    for f in stats_r._fields:
+        a = getattr(stats_r, f)
+        if a is None or f == "aborts":
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(getattr(stats_n, f)), err_msg=f
+        )
+    assert _tree_equal(st_r.sim, st_n.sim)
+    assert _tree_equal(st_r.q, st_n.q)
+
+
+def test_exclusive_window_matches_rainbow_counts():
+    """"nomad-exclusive" (async_window=4, no aborts, exclusive residency)
+    isolates the charging-schedule axis: the CONTROLLER decisions are
+    rainbow's verbatim, so counts and flat-model metrics are identical;
+    only the queueing stall fields may differ (installments vs lump)."""
+    from repro.engine import simloop
+    from repro.engine.policy import get_policy
+
+    mc = MachineConfig()
+    chunks, meta = simloop.make_chunks("streamcluster", "rainbow", mc, 5, 4, 3000)
+
+    def run(policy, control):
+        spec = simloop.EngineSpec(
+            policy=policy, mc=mc,
+            num_superpages=meta["num_superpages"],
+            footprint_pages=meta["footprint_pages"],
+            control=control,
+            timing_model="queueing",
+            queue_geometry=get_geometry("constrained"),
+        )
+        return simloop.engine_run(spec, simloop.engine_init(spec), chunks)
+
+    _, stats_r = run("rainbow", None)
+    _, stats_n = run("nomad", get_policy("nomad-exclusive", mc=mc))
+    for f in ("migrations", "evictions", "dirty_evictions", "shootdowns"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(stats_r, f)), np.asarray(getattr(stats_n, f)),
+            err_msg=f,
+        )
+    assert int(np.asarray(stats_n.aborts).sum()) == 0
+    # W=4 spreads the charge: the stall profile must actually differ
+    assert not np.array_equal(
+        np.asarray(stats_r.mig_stall), np.asarray(stats_n.mig_stall)
+    )
+
+
+def test_abort_rollback_semantics():
+    """A written in-flight page is rolled back: counted, shot down, and no
+    longer DRAM-resident — while untouched in-flight lanes stay installed."""
+    import jax.numpy as jnp
+
+    from repro.core.remap import translate
+    from repro.engine import nomad as nomad_mod
+    from repro.engine import simloop
+    from repro.engine.policy import get_policy
+
+    mc = MachineConfig()
+    control = get_policy("nomad-sim", mc=mc)  # W=4, aborts + shadow on
+    spec = simloop.EngineSpec(
+        policy="nomad", mc=mc, num_superpages=8, footprint_pages=8 * 512,
+        control=control,
+    )
+    cfg = simloop._rainbow_cfg(spec)
+    state = simloop.engine_init(spec)
+
+    def interval(state, sp, page, is_write):
+        chunk = simloop.TraceChunks(
+            sp=jnp.asarray(sp, jnp.int32)[None],
+            page=jnp.asarray(page, jnp.int32)[None],
+            vpn=jnp.asarray(np.asarray(sp) * 512 + np.asarray(page),
+                            jnp.int32)[None],
+            is_write=jnp.asarray(is_write, bool)[None],
+            in_dram=jnp.zeros((1, len(sp)), bool),
+        )
+        return simloop.engine_run(spec, state, chunk)
+
+    # two hot read-only pages: warm-up interval, then the migrating interval
+    n = 1000
+    sp = np.zeros(n, np.int32)
+    page = np.where(np.arange(n) % 2 == 0, 3, 9).astype(np.int32)
+    reads = np.zeros(n, bool)
+    state, _ = interval(state, sp, page, reads)
+    state, stats = interval(state, sp, page, reads)
+    assert int(np.asarray(stats.migrations)[-1]) == 2
+    in_flight = np.asarray(nomad_mod._in_flight_map(cfg, state.pol))
+    assert in_flight[3] and in_flight[9]
+
+    # page 3 is written while mid-copy -> exactly that transaction aborts
+    state, stats = interval(state, sp, page,
+                            (page == 3) & (np.arange(n) % 100 == 0))
+    assert int(np.asarray(stats.aborts)[-1]) == 1
+    resident, _ = translate(state.pol.rb.remap, jnp.asarray([0, 0]),
+                            jnp.asarray([3, 9]))
+    assert not bool(resident[0]) and bool(resident[1])
+    assert int(np.asarray(state.pol.aborts_total)) == 1
